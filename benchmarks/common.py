@@ -1,0 +1,56 @@
+"""Shared benchmark helpers: a small CPU-trainable model + quick SFT."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import MathTaskDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.config import ModelConfig
+from repro.models.model import BlockDiffLM
+from repro.optim.adamw import AdamWConfig
+from repro.sft.trainer import SFTTrainer
+
+SEQ_LEN = 96
+
+
+def bench_config(d_model=128, n_layers=2, block_size=16,
+                 attn_impl="structured") -> ModelConfig:
+    return ModelConfig(
+        name=f"bench-{d_model}x{n_layers}", n_layers=n_layers,
+        d_model=d_model, n_heads=4, n_kv_heads=2,
+        head_dim=d_model // 4, d_ff=2 * d_model, vocab_size=384,
+        block_size=block_size, attn_impl=attn_impl)
+
+
+def quick_sft(cfg: ModelConfig, steps: int = 80, batch: int = 16,
+              lr: float = 3e-3, seed: int = 0, level: int = 1):
+    tok = ByteTokenizer()
+    model = BlockDiffLM(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    ds = MathTaskDataset(tok, cfg.block_size, seq_len=SEQ_LEN, seed=seed,
+                         level=level)
+    tr = SFTTrainer(model, AdamWConfig(lr=lr, clip_norm=1.0), params)
+    tr.run(ds.sft_batches(batch), steps, jax.random.PRNGKey(seed + 1),
+           verbose=False)
+    return model, tr.params, tok, ds
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

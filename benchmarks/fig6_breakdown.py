@@ -1,0 +1,61 @@
+"""Fig. 6 analogue: per-RL-step wall-clock breakdown.
+
+Compares the DiRL design against the pre-DiRL loop on the same hardware:
+
+  * rollout            — blockwise engine generation (shared backend,
+                         modest delta, as the paper observes);
+  * logits+train       — DiPO update using (a) the fused one-pass packed
+                         layout vs (b) sequential per-step replay (the
+                         no-FlexAttention baseline);
+  * weight update      — (a) in-place server push vs (b) the Fig. 5a
+                         checkpoint round-trip (1 save + reload on next
+                         rollout).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import AdamWConfig
+from repro.rl.trainer import DiPOTrainer, DiPOConfig
+from repro.serving.engine import RolloutEngine, GenerationConfig
+from repro.serving.server import ModelServer, OfflineWeightStore
+
+
+def run(quick: bool = True) -> list[str]:
+    from .common import bench_config, quick_sft
+    cfg = bench_config()
+    steps = 2 if quick else 6
+    model, params, tok, ds = quick_sft(cfg, steps=60 if quick else 150,
+                                       level=0)
+    rows = ["setup,phase,seconds_per_step"]
+
+    for setup, store_cls, scheme in [
+            ("dirl(fused+inplace)", ModelServer, "packed"),
+            ("baseline(replay+offline)", OfflineWeightStore, "replay")]:
+        store = store_cls(jax.tree.map(jnp.copy, params))
+        engine = RolloutEngine(model, store, GenerationConfig(
+            max_len=96, s_max=4, mode="dynamic", tau=0.7, temperature=1.0))
+        tr = DiPOTrainer(model, engine, AdamWConfig(lr=5e-5),
+                         DiPOConfig(group_size=4, logprob_scheme=scheme),
+                         store.params)
+        tr.run(ds.prompt_batches(4), steps + 1, jax.random.PRNGKey(7),
+               verbose=False)
+        t = tr.timings[1:]  # drop compile step
+        roll = float(np.mean([x["rollout_s"] for x in t]))
+        train = float(np.mean([x["train_s"] for x in t]))
+        upd = float(np.mean([x["update_s"] for x in t]))
+        if store_cls is OfflineWeightStore:
+            upd += store.load_seconds  # reload paid at next rollout
+        rows += [f"{setup},rollout,{roll:.3f}",
+                 f"{setup},logits+train,{train:.3f}",
+                 f"{setup},weight_update,{upd:.4f}"]
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,97 @@
+"""Fig. 7 analogue: SFT train-step latency across model sizes, for the
+DiRL fused mask vs the TraceRL-style layout vs the no-fusion replay
+baseline (per-block sequential logit computation)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_diffusion import sft_loss, token_cross_entropy
+from repro.core.masks import plain_layout, sample_sft_noise
+from repro.models.model import BlockDiffLM
+
+
+def _replay_sft_loss(model, params, batch, rng):
+    """No-fused-mask baseline: per-block sequential recomputation (the
+    cost structure TraceRL §4.1 improves on)."""
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    bsz = cfg.block_size
+    K = L // bsz
+    steps, weight, _ = sample_sft_noise(rng, tokens, batch["prompt_mask"],
+                                        batch["valid"],
+                                        block_size=cfg.block_size)
+    meta = plain_layout(tokens, batch["valid"], block_size=bsz)
+    caches = model.make_caches(B, L)
+    _, out = model.forward_masked(params, tokens, meta, caches=caches,
+                                  want_boundaries=bool(cfg.ssm_kind))
+    caches = out["caches"]
+    MASK = cfg.resolved_mask_token
+
+    def blk_loss(k):
+        ids = jnp.where(
+            jax.lax.dynamic_slice_in_dim(steps, k * bsz, bsz, 1) > 0, MASK,
+            jax.lax.dynamic_slice_in_dim(tokens, k * bsz, bsz, 1))
+        pos = k * bsz + jnp.arange(bsz, dtype=jnp.int32)[None, :]
+        pos = jnp.broadcast_to(pos, (B, bsz))
+        lg, _ = model.decode_step(params, ids, pos, caches,
+                                  cache_limit=k * bsz)
+        ce = token_cross_entropy(
+            lg, jax.lax.dynamic_slice_in_dim(tokens, k * bsz, bsz, 1))
+        w = jax.lax.dynamic_slice_in_dim(weight, k * bsz, bsz, 1)
+        return jnp.sum(ce * w)
+
+    tot = jnp.sum(jax.lax.map(blk_loss, jnp.arange(K)))
+    denom = jnp.maximum(jnp.sum(batch["valid"] & ~batch["prompt_mask"]), 1)
+    return tot / denom, {}
+
+
+def run(quick: bool = True) -> list[str]:
+    from .common import SEQ_LEN, bench_config, timed
+    from repro.data.pipeline import MathTaskDataset
+    from repro.data.tokenizer import ByteTokenizer
+
+    sizes = [(128, 2), (256, 2)] if quick else [(128, 2), (256, 4),
+                                                (384, 6), (512, 8)]
+    rows = ["d_model,n_layers,variant,ms_per_train_step"]
+    tok = ByteTokenizer()
+    for d, nl in sizes:
+        for variant in ["dirl", "tracer", "replay"]:
+            cfg = bench_config(d_model=d, n_layers=nl)
+            model = BlockDiffLM(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            ds = MathTaskDataset(tok, cfg.block_size, seq_len=SEQ_LEN,
+                                 seed=0)
+            b = next(ds.sft_batches(8)).asdict()
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            if variant == "tracer":
+                # TraceRL layout needs a static prompt length: use the
+                # common block-aligned minimum
+                plen = int(b["prompt_mask"].sum(1).min())
+                plen -= plen % cfg.block_size
+                b["prompt_len_static"] = plen
+                loss_fn = functools.partial(sft_loss, model,
+                                            layout="tracer")
+            elif variant == "dirl":
+                loss_fn = functools.partial(sft_loss, model)
+            else:
+                loss_fn = functools.partial(_replay_sft_loss, model)
+
+            @jax.jit
+            def step(p, rng):
+                (l, _), g = jax.value_and_grad(
+                    lambda q: loss_fn(q, b, rng), has_aux=True)(p)
+                return l, g
+
+            t = timed(lambda: step(params, jax.random.PRNGKey(1)),
+                      warmup=1, iters=2)
+            rows.append(f"{d},{nl},{variant},{t * 1e3:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,22 @@
+"""Fig. 8 analogue: dynamic-threshold ablation — accuracy and tokens/step
+as tau sweeps 0.5..0.99 for the post-trained model."""
+
+from __future__ import annotations
+
+
+def run(quick: bool = True) -> list[str]:
+    from .common import bench_config, quick_sft
+    from .table1_eval import evaluate
+    taus = [0.5, 0.9] if quick else [0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.99]
+    model, params, tok, _ = quick_sft(bench_config(),
+                                      steps=200 if quick else 400, level=0)
+    rows = ["tau,acc,tokens_per_step"]
+    for tau in taus:
+        m = evaluate(model, params, tok, n_problems=32 if quick else 64,
+                     mode="dynamic", tau=tau, level=0)
+        rows.append(f"{tau},{m['acc']:.3f},{m['tokens_per_step']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

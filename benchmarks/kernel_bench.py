@@ -1,0 +1,64 @@
+"""Kernel-level benchmark: block-diffusion attention implementations.
+
+Wall-clock on CPU is NOT the deliverable (interpret-mode Pallas is a
+correctness harness); the structurally meaningful numbers are the tile
+visit fractions — the FLOP savings the TPU kernel realises via its
+FlexAttention-style block-sparse map — reported per layout/shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import dirl_layout, packed_layout, sample_sft_noise
+from repro.kernels import ops
+
+
+def run(quick: bool = True) -> list[str]:
+    from .common import timed
+    rows = ["layout,L,block,impl,us_per_call,tile_visit_fraction"]
+    Ls = [256] if quick else [256, 512, 1024]
+    for L in Ls:
+        for bsz in [16, 32]:
+            key = jax.random.PRNGKey(0)
+            B, H, Hkv, Dh = 2, 4, 2, 32
+            tokens = jax.random.randint(key, (B, L), 4, 100)
+            valid = jnp.ones((B, L), bool)
+            pm = jnp.arange(L)[None] < bsz
+            steps, _, _ = sample_sft_noise(key, tokens, pm, valid,
+                                           block_size=bsz)
+            ids, meta, _ = dirl_layout(tokens, steps, valid,
+                                       block_size=bsz, mask_token=101,
+                                       noised=True)
+            T = meta.length
+            ks = jax.random.split(key, 3)
+            q = jax.random.normal(ks[0], (B, T, H, Dh))
+            k = jax.random.normal(ks[1], (B, T, Hkv, Dh))
+            v = jax.random.normal(ks[2], (B, T, Hkv, Dh))
+            qm = ops.pack_meta(meta)
+            tm = ops.build_tile_map(qm, qm, 128, 128)
+            frac = ops.tile_map_stats(tm)["visit_fraction"]
+            for impl, kw in [("ref", {}),
+                             ("chunked", {}),
+                             ("structured",
+                              dict(dup_len=L, block_size=bsz))]:
+                fn = jax.jit(lambda a, b, c: ops.attention(
+                    a, b, c, meta, meta, impl=impl, **kw))
+                t = timed(lambda: fn(q, k, v), warmup=1, iters=3)
+                rows.append(f"sft_dup,{L},{bsz},{impl},{t * 1e6:.0f},"
+                            f"{frac:.3f}")
+            # packed RL layout visit fraction
+            steps_rl = jax.random.randint(key, (B, L), 0, 4)
+            _, meta_p, _, _ = packed_layout(tokens, steps_rl, valid,
+                                            block_size=bsz,
+                                            mask_token=101, s_max=4)
+            qmp = ops.pack_meta(meta_p)
+            tmp = ops.build_tile_map(qmp, qmp, 128, 128)
+            fr = ops.tile_map_stats(tmp)["visit_fraction"]
+            rows.append(f"rl_packed,{L},{bsz},tile_map,0,{fr:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

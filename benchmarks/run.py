@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full]``
+
+Prints CSV blocks per benchmark.  --full widens sweeps (slower).
+The roofline/dry-run artifacts (deliverables e/g) are produced separately
+by ``python -m repro.launch.dryrun --all`` and summarised by
+``python -m repro.launch.rooflines``; this harness reports their status.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (fig6_breakdown, fig7_sizes, fig8_tau_sweep,
+                   kernel_bench, table1_eval)
+
+    benches = {
+        "kernel_bench": kernel_bench.run,
+        "fig7_sizes": fig7_sizes.run,
+        "fig6_breakdown": fig6_breakdown.run,
+        "table1_eval": table1_eval.run,
+        "fig8_tau_sweep": fig8_tau_sweep.run,
+    }
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"\n=== {name} ===")
+        try:
+            for row in fn(quick=quick):
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+
+    # dry-run / roofline status summary
+    print("\n=== dryrun_status ===")
+    root = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    recs = [json.load(open(p)) for p in glob.glob(os.path.join(root,
+                                                               "*.json"))]
+    ok = sum(1 for r in recs if r.get("ok"))
+    print(f"combos,{len(recs)},ok,{ok}")
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in recs if r.get("ok"))
+    for k, v in sorted(doms.items()):
+        print(f"dominant_{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: build a block-diffusion LM, run the fused SFT pass, decode.
+
+PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import decoding
+from repro.core.block_diffusion import sft_loss
+from repro.data.pipeline import MathTaskDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import BlockDiffLM
+
+
+def main():
+    cfg = configs.get_config("tiny")
+    model = BlockDiffLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model: {cfg.name}, params = {model.param_count(params):,}")
+
+    tok = ByteTokenizer()
+    ds = MathTaskDataset(tok, cfg.block_size, seq_len=96, seed=0, level=0)
+    batch = next(ds.sft_batches(4)).asdict()
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+
+    # one fused duplicated-sequence SFT loss (paper §4.1)
+    loss, metrics = sft_loss(model, params, batch, jax.random.PRNGKey(1))
+    print(f"SFT NELBO = {float(loss):.3f} "
+          f"(masked CE {float(metrics['masked_ce']):.3f})")
+
+    # blockwise generation with dynamic-threshold decoding (paper §4.4)
+    pb = next(ds.prompt_batches(2))
+    gen = decoding.generate(model, params, jnp.asarray(pb.prompt_tokens),
+                            jnp.asarray(pb.prompt_blocks),
+                            jax.random.PRNGKey(2), max_len=96, s_max=4,
+                            mode="dynamic", tau=0.9, eos_id=tok.eos_id)
+    for i, prompt in enumerate(pb.texts):
+        lo = int(pb.prompt_blocks[i]) * cfg.block_size
+        hi = lo + int(gen["gen_blocks"][i]) * cfg.block_size
+        out = tok.decode(jax.device_get(gen["tokens"][i, lo:hi]))
+        print(f"prompt: {prompt!r}\n  -> (untrained) {out!r}")
+    print("step map of first generated block:",
+          gen["steps"][0, lo:lo + cfg.block_size])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""msgpack pytree checkpointing.
+
+This is deliberately a *real* file-system serialisation path: the paper's
+Fig. 5a/6 baseline round-trips checkpoints through storage every RL step
+(2 loads + 1 save), and benchmarks/fig6 measures exactly this against the
+in-place server update.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x) -> dict:
+    a = np.asarray(x)
+    # str(dtype) round-trips ml_dtypes names ("bfloat16") that
+    # numpy's .str protocol does not
+    return {b"dtype": str(a.dtype), b"shape": list(a.shape),
+            b"data": a.tobytes()}
+
+
+def _decode_leaf(d) -> np.ndarray:
+    dt = jnp.dtype(d[b"dtype"].decode() if isinstance(d[b"dtype"], bytes)
+                   else d[b"dtype"])
+    return np.frombuffer(d[b"data"], dtype=dt).reshape(
+        d[b"shape"]).copy()
+
+
+def save_pytree(path: str, tree) -> int:
+    """Serialise a pytree of arrays.  Returns bytes written."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        b"treedef": str(treedef).encode(),
+        b"leaves": [_encode_leaf(l) for l in leaves],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    blob = msgpack.packb(payload)
+    with open(path, "wb") as f:
+        f.write(blob)
+    return len(blob)
+
+
+def load_pytree(path: str, like):
+    """Load into the structure of ``like`` (shape/dtype-checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves = [_decode_leaf(d) for d in payload[b"leaves"]]
+    ref_leaves, treedef = jax.tree_util.tree_flatten(like)
+    assert len(leaves) == len(ref_leaves), \
+        f"leaf count mismatch: {len(leaves)} vs {len(ref_leaves)}"
+    out = []
+    for got, ref in zip(leaves, ref_leaves):
+        assert tuple(got.shape) == tuple(ref.shape), (got.shape, ref.shape)
+        out.append(jnp.asarray(got, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

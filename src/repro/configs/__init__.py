@@ -1,0 +1,76 @@
+"""Architecture registry (``--arch <id>``) + assigned input shapes.
+
+Every entry cites its source in the module docstring; ``get_config(name)``
+returns the exact assigned configuration, ``get_smoke_config(name)`` the
+reduced same-family variant exercised on CPU by tests/test_arch_smoke.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+_MODULES = {
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "gemma2-27b": "gemma2_27b",
+    "deepseek-7b": "deepseek_7b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "sdar-8b": "sdar_8b",
+    "tiny": "tiny",
+}
+
+ASSIGNED_ARCHS = [k for k in _MODULES if k not in ("tiny",)]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# archs with a sub-quadratic decode path (SSM state / SWA ring cache);
+# pure full-attention archs skip long_500k (DESIGN.md §4).
+LONG_CONTEXT_ARCHS = {
+    "rwkv6-1.6b", "jamba-1.5-large-398b", "mixtral-8x22b",
+    "h2o-danube-3-4b", "gemma2-27b",
+}
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch '{name}'; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str, **kw):
+    return _module(name).config(**kw)
+
+
+def get_smoke_config(name: str, **kw):
+    return _module(name).smoke_config(**kw)
+
+
+def arch_shape_pairs() -> list[tuple[str, str]]:
+    """All (arch, shape) baseline dry-run combinations (skips noted)."""
+    pairs = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in INPUT_SHAPES:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                continue
+            pairs.append((arch, shape))
+    return pairs

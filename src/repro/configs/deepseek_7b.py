@@ -1,0 +1,23 @@
+"""deepseek-7b — llama-arch [arXiv:2401.02954].
+
+[dense] 30L d_model=4096 32H (MHA, kv=32) d_ff=11008 vocab=102400.
+long_500k: SKIPPED (pure full attention; DESIGN.md §4).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-7b", arch_type="dense", source="arXiv:2401.02954",
+        n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32,
+        head_dim=128, d_ff=11008, vocab_size=102400,
+        tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="deepseek7b-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+        block_size=8, **kw)

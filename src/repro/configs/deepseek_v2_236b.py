@@ -1,0 +1,34 @@
+"""deepseek-v2-236b — MLA kv_lora=512, 2 shared + 160 routed top-6
+[arXiv:2405.04434].
+
+[moe] 60L d_model=5120 128H, MLA (q_lora 1536, kv_lora 512, nope 128,
+rope 64, v 128), expert d_ff=1536, first dense layer d_ff=12288,
+vocab=102400.  Attention is implemented in the absorbed-MLA form (the
+latent 576-d cache is what decode shapes carry).
+long_500k: SKIPPED (full attention; MLA compresses the cache but not the
+quadratic scan — DESIGN.md §4).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b", arch_type="moe", attn_kind="mla",
+        source="arXiv:2405.04434",
+        n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128,
+        q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+        qk_rope_dim=64, v_head_dim=128,
+        d_ff=1536, moe_d_ff=1536, first_k_dense=1, dense_d_ff=12288,
+        n_experts=160, n_shared_experts=2, top_k=6,
+        vocab_size=102400, tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="dsv2-smoke", n_layers=3, d_model=128, n_heads=4,
+        n_kv_heads=4, q_lora_rank=32, kv_lora_rank=32, qk_nope_dim=16,
+        qk_rope_dim=8, v_head_dim=16, d_ff=64, moe_d_ff=64,
+        dense_d_ff=256, n_experts=4, n_shared_experts=1, top_k=2,
+        vocab_size=512, block_size=8, **kw)

@@ -1,0 +1,32 @@
+"""gemma2-27b — local+global alternating, logit softcap [arXiv:2408.00118].
+
+[dense] 46L d_model=4608 32H (GQA kv=16) head_dim=128 d_ff=36864
+vocab=256000; even layers sliding-window 4096, odd layers global;
+attention softcap 50, final softcap 30, query scale 1/sqrt(144)? — HF
+config query_pre_attn_scalar = d_model/n_heads = 144; sandwich norms;
+embeddings scaled by sqrt(d) and tied.
+long_500k: RUNS with the alternating pattern — local layers keep a 4096
+ring cache, global layers a full sequence-sharded cache (decode is O(L)
+per step); noted as partially-windowed in DESIGN.md.
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b", arch_type="dense", source="arXiv:2408.00118",
+        n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16,
+        head_dim=128, d_ff=36864, vocab_size=256000,
+        local_global=True, sliding_window=4096,
+        attn_logit_softcap=50.0, final_logit_softcap=30.0,
+        query_scale=144.0 ** -0.5, sandwich_norm=True, embed_scale=True,
+        act="gelu", tie_embeddings=True, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="gemma2-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        sliding_window=32, query_scale=32.0 ** -0.5, block_size=8, **kw)

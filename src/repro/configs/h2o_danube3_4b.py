@@ -1,0 +1,24 @@
+"""h2o-danube-3-4b — llama+mistral mix, SWA [arXiv:2401.16818].
+
+[dense] 24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000,
+sliding window 4096.  long_500k: RUNS (SWA ring cache).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b", arch_type="dense",
+        source="arXiv:2401.16818",
+        n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, head_dim=120,
+        d_ff=10240, vocab_size=32000, sliding_window=4096,
+        rope_theta=10000.0, tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="danube3-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        sliding_window=32, block_size=8, **kw)

@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b — Mamba+attn 1:7 interleave, MoE
+[arXiv:2403.19887].
+
+[hybrid] 72L d_model=8192: attention at layer index 4 of every 8-layer
+Jamba block (1:7 ratio), 64H (GQA kv=8); Mamba elsewhere (d_state 16,
+conv 4, expand 2); MoE 16e top-2 on every second layer, d_ff=24576,
+vocab=65536.  long_500k: RUNS (Mamba state decode + 1/8 attention layers
+with a sequence-sharded cache).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b", arch_type="hybrid", ssm_kind="mamba",
+        source="arXiv:2403.19887",
+        n_layers=72, d_model=8192, attn_every=8, attn_offset=4,
+        n_heads=64, n_kv_heads=8, head_dim=128,
+        d_state=16, conv_width=4, expand=2,
+        d_ff=24576, moe_d_ff=24576, n_experts=16, top_k=2,
+        moe_every=2, moe_offset=1,
+        vocab_size=65536, tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="jamba-smoke", n_layers=2, d_model=128, attn_every=2,
+        attn_offset=1, n_heads=4, n_kv_heads=2, head_dim=32, d_state=8,
+        d_ff=256, moe_d_ff=256, n_experts=4, moe_every=2, moe_offset=1,
+        vocab_size=512, block_size=8, **kw)

@@ -1,0 +1,34 @@
+"""llama-3.2-vision-11b — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+[vlm] 40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; gated
+cross-attention layers interleaved every 5th layer (8 total) attend to
+image-patch embeddings.  The ViT vision encoder is a STUB: input_specs()
+provides precomputed patch embeddings (B, 1600, 1280) which the built-in
+projector maps to d_model.  long_500k: SKIPPED (full attention).
+"""
+
+from repro.models.config import ModelConfig
+
+N_PATCHES = 1600
+PATCH_DIM = 1280
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b", arch_type="vlm",
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+        n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+        head_dim=128, d_ff=14336, vocab_size=128256,
+        cross_attn_every=5, cross_offset=3,
+        n_extra_tokens=N_PATCHES, extra_embed_dim=PATCH_DIM,
+        rope_theta=500000.0, tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="llama32v-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        cross_attn_every=2, cross_offset=1, n_extra_tokens=16,
+        extra_embed_dim=64, block_size=8, **kw)

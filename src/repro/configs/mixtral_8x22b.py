@@ -1,0 +1,25 @@
+"""mixtral-8x22b — 8 experts top-2, SWA [arXiv:2401.04088].
+
+[moe] 56L d_model=6144 48H (GQA kv=8) expert d_ff=16384 vocab=32768,
+MoE 8e top-2, sliding window 4096 (per the assignment pool).
+long_500k: RUNS (window-bounded ring KV cache).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b", arch_type="moe", source="arXiv:2401.04088",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+        d_ff=16384, moe_d_ff=16384, vocab_size=32768,
+        n_experts=8, top_k=2, rope_theta=1e6,
+        sliding_window=4096, tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="mixtral-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, moe_d_ff=256, vocab_size=512,
+        n_experts=4, sliding_window=32, block_size=8, **kw)

@@ -1,0 +1,30 @@
+"""moonshot-v1-16b-a3b — Moonlight-16B-A3B
+[hf:moonshotai/Moonlight-16B-A3B].
+
+Pool tags it [dense] but specifies "MoE 64e top-6"; per the Moonlight
+model card we implement the MoE: 48L d_model=2048 16H (kv=16) expert
+d_ff=1408, 64 routed top-6 + 2 shared experts, first layer dense
+(d_ff=11264), vocab=163840.  long_500k: SKIPPED (full attention).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b", arch_type="moe",
+        source="hf:moonshotai/Moonlight-16B-A3B",
+        n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+        head_dim=128, d_ff=1408, moe_d_ff=1408,
+        first_k_dense=1, dense_d_ff=11264,
+        n_experts=64, n_shared_experts=2, top_k=6,
+        vocab_size=163840, tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="moonshot-smoke", n_layers=3, d_model=128, n_heads=4,
+        n_kv_heads=4, head_dim=32, d_ff=64, moe_d_ff=64, dense_d_ff=256,
+        n_experts=4, n_shared_experts=1, top_k=2, vocab_size=512,
+        block_size=8, **kw)

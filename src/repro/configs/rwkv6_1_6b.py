@@ -1,0 +1,26 @@
+"""rwkv6-1.6b — Finch, data-dependent decay [arXiv:2404.05892].
+
+[ssm] 24L d_model=2048 (attention-free) d_ff=7168 vocab=65536.
+Block-diffusion applicability: recurrent — trained via the clean-pass +
+boundary-state noisy re-runs (DESIGN.md §4); RL logits via replay.
+long_500k: RUNS (O(1)-state decode).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config(**kw) -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b", arch_type="ssm", ssm_kind="rwkv6",
+        source="arXiv:2404.05892",
+        n_layers=24, d_model=2048, d_ff=7168, vocab_size=65536,
+        n_heads=32, n_kv_heads=32,            # unused (attention-free)
+        rwkv_head_dim=64, lora_rank=32,
+        tie_embeddings=False, block_size=32,
+        **kw)
+
+
+def smoke_config(**kw) -> ModelConfig:
+    return config().replace(
+        name="rwkv6-smoke", n_layers=2, d_model=128, d_ff=256,
+        vocab_size=512, rwkv_head_dim=32, lora_rank=8, block_size=8, **kw)

@@ -1,0 +1,216 @@
+"""Blockwise semi-autoregressive decoding (static & dynamic-threshold).
+
+The full generation loop is one jitted function: an outer fori over blocks
+(each sequence tracks its own block cursor, so ragged prompts decode in
+lock-step), an inner fori over denoise steps.  Every revealed token's step
+index is recorded — that step map is exactly what DiPO's unbiased logit
+computation consumes (trajectory.py).
+
+Dynamic decoding (paper §4.4/§5.1): at each denoise step, reveal every
+still-masked position whose top-1 probability exceeds tau (at least one —
+the best-confidence position — is always revealed).  Static decoding:
+reveal a fixed number of highest-confidence positions per step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .masks import plain_layout
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GenState:
+    tokens: jax.Array      # (B, L_max)
+    steps: jax.Array       # (B, L_max)
+    caches: dict
+    blk: jax.Array         # (B,) next block index per sequence
+    done: jax.Array        # (B,)
+    rng: jax.Array
+
+
+def _select_boundary(caches, bounds, prompt_blocks):
+    """Per-sequence SSM state at each sequence's own prompt boundary."""
+    B = prompt_blocks.shape[0]
+    rows = jnp.arange(B)
+
+    def merge_layer(cache, bd, grouped):
+        if bd is None or cache is None:
+            return cache
+        new = dict(cache)
+        for skey, arr in bd.items():
+            if grouped:  # (G, K, B, ...)
+                new[skey] = arr[:, prompt_blocks, rows]
+            else:        # (K, B, ...)
+                new[skey] = arr[prompt_blocks, rows]
+        return new
+
+    out = {"prefix": {}, "groups": {}}
+    for lk, cache in caches["prefix"].items():
+        out["prefix"][lk] = merge_layer(cache, bounds["prefix"].get(lk),
+                                        grouped=False)
+    for lk, cache in caches["groups"].items():
+        out["groups"][lk] = merge_layer(cache, bounds["groups"].get(lk),
+                                        grouped=True)
+    return out
+
+
+def prefill(model, params, prompt_tokens, prompt_blocks, max_len: int, *,
+            memory=None, memory_valid=None):
+    """Run the committed pass over (block-aligned, right-padded) prompts.
+
+    prompt_tokens (B, Lp) with Lp a block multiple; prompt_blocks (B,) the
+    per-sequence true prompt length in blocks.  Returns caches sized for
+    ``max_len`` with every prompt position written (positions beyond a
+    sequence's true prompt are masked at decode time via cache_limit and
+    overwritten on commit).
+    """
+    cfg = model.cfg
+    B, Lp = prompt_tokens.shape
+    valid = jnp.ones((B, Lp), bool)
+    meta = plain_layout(prompt_tokens, valid, block_size=cfg.block_size)
+    caches = model.make_caches(B, max_len)
+    want_b = bool(cfg.ssm_kind)
+    _, out = model.forward_masked(params, prompt_tokens, meta,
+                                  caches=caches, want_boundaries=want_b,
+                                  memory=memory, memory_valid=memory_valid)
+    caches = out["caches"]
+    if want_b:
+        caches = _select_boundary(caches, out["boundaries"], prompt_blocks)
+    return caches
+
+
+def denoise_block(model, params, caches, blk, rng, *,
+                  mode: str, tau: float, n_steps: int,
+                  temperature: float, s_max: int,
+                  memory=None, memory_valid=None):
+    """Denoise one block for every sequence.  Returns (ids, step_map, rng)."""
+    cfg = model.cfg
+    bsz = cfg.block_size
+    MASK = cfg.resolved_mask_token
+    B = blk.shape[0]
+    pos = blk[:, None] * bsz + jnp.arange(bsz, dtype=jnp.int32)[None, :]
+    cache_limit = blk * bsz
+    n_per_step = max(1, -(-bsz // max(n_steps, 1)))
+
+    def body(s, carry):
+        ids, step_map, rng = carry
+        logits, _ = model.decode_step(params, ids, pos, caches,
+                                      cache_limit=cache_limit,
+                                      memory=memory,
+                                      memory_valid=memory_valid)
+        lf = logits.astype(jnp.float32)
+        # the [MASK] token is an input symbol, never an output
+        lf = lf.at[..., MASK].set(-jnp.inf)
+        rng, kr = jax.random.split(rng)
+        if temperature > 0:
+            cand = jax.random.categorical(kr, lf / temperature, axis=-1)
+        else:
+            cand = jnp.argmax(lf, axis=-1)
+        probs = jax.nn.softmax(lf, axis=-1)
+        conf = jnp.take_along_axis(probs, cand[..., None], axis=-1)[..., 0]
+
+        masked = ids == MASK
+        score = jnp.where(masked, conf, -1.0)
+        if mode == "dynamic":
+            reveal = masked & (conf >= tau)
+            # always reveal at least the best-confidence masked position
+            best = jnp.argmax(score, axis=-1)
+            force = jax.nn.one_hot(best, bsz, dtype=bool) & masked
+            reveal = reveal | (force & ~reveal.any(-1, keepdims=True))
+        else:
+            thr = jnp.sort(score, axis=-1)[:, -n_per_step][:, None]
+            reveal = masked & (score >= thr)
+        # last step: flush everything still masked
+        reveal = jnp.where(s >= s_max - 1, masked, reveal)
+
+        ids = jnp.where(reveal, cand.astype(ids.dtype), ids)
+        step_map = jnp.where(reveal, s, step_map)
+        return ids, step_map, rng
+
+    ids0 = jnp.full((B, bsz), MASK, jnp.int32)
+    steps0 = jnp.zeros((B, bsz), jnp.int32)
+    ids, step_map, rng = jax.lax.fori_loop(0, s_max, body,
+                                           (ids0, steps0, rng))
+    return ids, step_map, pos, rng
+
+
+def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
+             max_len: int, s_max: int, mode: str = "dynamic",
+             tau: float = 0.9, n_steps: int = 8,
+             temperature: float = 0.0, eos_id: int = 1,
+             memory=None, memory_valid=None) -> dict:
+    """Full blockwise generation (jit-compatible; all shapes static).
+
+    Returns {"tokens" (B, L_max), "steps" (B, L_max), "gen_blocks" (B,),
+    "prompt_blocks" (B,), "done" (B,)} — everything RolloutBatch needs.
+    """
+    cfg = model.cfg
+    bsz = cfg.block_size
+    B, Lp = prompt_tokens.shape
+    n_blocks_total = max_len // bsz
+    max_new_blocks = n_blocks_total - Lp // bsz
+    MASK = cfg.resolved_mask_token
+
+    caches = prefill(model, params, prompt_tokens, prompt_blocks, max_len,
+                     memory=memory, memory_valid=memory_valid)
+    tokens = jnp.concatenate(
+        [prompt_tokens,
+         jnp.full((B, max_len - Lp), MASK, prompt_tokens.dtype)], axis=1)
+    st = GenState(tokens=tokens.astype(jnp.int32),
+                  steps=jnp.zeros((B, max_len), jnp.int32),
+                  caches=caches, blk=prompt_blocks.astype(jnp.int32),
+                  done=jnp.zeros((B,), bool), rng=rng)
+    rows = jnp.arange(B)[:, None]
+
+    def outer(_, st: GenState):
+        blk = jnp.minimum(st.blk, n_blocks_total - 1)
+        ids, step_map, pos, rng = denoise_block(
+            model, params, st.caches, blk, st.rng, mode=mode, tau=tau,
+            n_steps=n_steps, temperature=temperature, s_max=s_max,
+            memory=memory, memory_valid=memory_valid)
+        # frozen sequences re-commit their existing block (idempotent)
+        old_ids = jnp.take_along_axis(st.tokens, pos, axis=1)
+        old_steps = jnp.take_along_axis(st.steps, pos, axis=1)
+        ids = jnp.where(st.done[:, None], old_ids, ids)
+        step_map = jnp.where(st.done[:, None], old_steps, step_map)
+
+        _, caches = model.decode_step(params, ids, pos, st.caches,
+                                      cache_limit=blk * bsz, write=True,
+                                      memory=memory,
+                                      memory_valid=memory_valid)
+        tokens = st.tokens.at[rows, pos].set(ids)
+        steps = st.steps.at[rows, pos].set(step_map)
+        hit_eos = (ids == eos_id).any(axis=-1)
+        done = st.done | hit_eos
+        new_blk = jnp.where(st.done, st.blk,
+                            jnp.minimum(st.blk + 1, n_blocks_total))
+        done = done | (new_blk >= n_blocks_total)
+        return GenState(tokens=tokens, steps=steps, caches=caches,
+                        blk=new_blk, done=done, rng=rng)
+
+    st = jax.lax.fori_loop(0, max_new_blocks, outer, st)
+    return {
+        "tokens": st.tokens,
+        "steps": st.steps,
+        "gen_blocks": st.blk - prompt_blocks,
+        "prompt_blocks": prompt_blocks,
+        "done": st.done,
+    }
+
+
+def rollout_to_batch(gen: dict, rewards, group, block_size: int):
+    """Package a ``generate`` output dict into a RolloutBatch."""
+    from .trajectory import RolloutBatch
+    B, L = gen["tokens"].shape
+    pos_blk = jnp.arange(L, dtype=jnp.int32)[None, :] // block_size
+    prompt_mask = pos_blk < gen["prompt_blocks"][:, None]
+    valid = pos_blk < (gen["prompt_blocks"] + gen["gen_blocks"])[:, None]
+    return RolloutBatch(tokens=gen["tokens"], steps=gen["steps"],
+                        prompt_mask=prompt_mask, valid=valid,
+                        rewards=rewards, group=group)

@@ -1,0 +1,95 @@
+"""DiPO — unbiased GRPO for blockwise dLLMs (paper §3.2, Eq. 6-8).
+
+Built on trajectory-exact log-probs (trajectory.py).  Supports:
+
+* Eq. 6 — sequence-normalised clipped surrogate with explicit old policy;
+* Eq. 7 — online variant: pi_old = stop_gradient(pi_theta) (fresh rollouts
+  every step, the DiRL server loop);
+* Eq. 8 — DAPO token-level aggregation (global 1/sum|tau| normaliser);
+* reverse-KL penalty to a *fixed reference* policy (k3 estimator).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .trajectory import RolloutBatch
+
+
+def group_advantages(rewards: jax.Array, group: jax.Array,
+                     n_groups: int, *, normalize_std: bool = False
+                     ) -> jax.Array:
+    """A_i = r_i - mean(group)  (optionally /std, GRPO-style).
+
+    rewards (B,), group (B,) int in [0, n_groups)."""
+    ones = jnp.ones_like(rewards)
+    gsum = jnp.zeros((n_groups,), rewards.dtype).at[group].add(rewards)
+    gcnt = jnp.zeros((n_groups,), rewards.dtype).at[group].add(ones)
+    gmean = gsum / jnp.maximum(gcnt, 1.0)
+    adv = rewards - gmean[group]
+    if normalize_std:
+        gsq = jnp.zeros((n_groups,), rewards.dtype).at[group].add(
+            jnp.square(rewards))
+        gvar = gsq / jnp.maximum(gcnt, 1.0) - jnp.square(gmean)
+        adv = adv / jnp.sqrt(jnp.maximum(gvar[group], 1e-6))
+    return adv
+
+
+def _clip_surrogate(ratio, adv, eps):
+    return jnp.minimum(ratio * adv, jnp.clip(ratio, 1 - eps, 1 + eps) * adv)
+
+
+def dipo_loss(logp: jax.Array, roll: RolloutBatch, *,
+              old_logp: jax.Array | None = None,
+              ref_logp: jax.Array | None = None,
+              n_groups: int,
+              eps: float = 0.2, beta: float = 0.0,
+              aggregate: str = "token",
+              normalize_std: bool = False) -> tuple[jax.Array, dict]:
+    """Policy loss from trajectory-exact log-probs.
+
+    logp (B, L): current-policy per-token log-probs at their reveal steps.
+    old_logp: behaviour policy; None -> online Eq. 7 (stop-gradient).
+    ref_logp: fixed reference for the KL penalty (None -> no penalty).
+    aggregate: "token" (Eq. 8 / DAPO) or "seq" (Eq. 6).
+    Returns (scalar loss to *minimise*, metrics).
+    """
+    mask = roll.loss_mask.astype(jnp.float32)             # (B, L)
+    adv = group_advantages(roll.rewards, roll.group, n_groups,
+                           normalize_std=normalize_std)   # (B,)
+
+    if old_logp is None:
+        old_logp = jax.lax.stop_gradient(logp)
+    ratio = jnp.exp(logp - old_logp)
+    surr = _clip_surrogate(ratio, adv[:, None], eps) * mask
+
+    if aggregate == "token":
+        denom = jnp.maximum(mask.sum(), 1.0)
+        obj = surr.sum() / denom
+    elif aggregate == "seq":
+        per_seq = surr.sum(axis=1) / jnp.maximum(mask.sum(axis=1), 1.0)
+        obj = per_seq.mean()
+    else:
+        raise ValueError(aggregate)
+
+    kl = jnp.zeros((), jnp.float32)
+    if ref_logp is not None and beta:
+        # k3 estimator of KL(pi || ref) on sampled tokens
+        lr = ref_logp - logp
+        k3 = (jnp.exp(lr) - lr - 1.0) * mask
+        kl = k3.sum() / jnp.maximum(mask.sum(), 1.0)
+
+    loss = -(obj - beta * kl)
+
+    clipped = ((ratio > 1 + eps) | (ratio < 1 - eps)).astype(jnp.float32)
+    metrics = {
+        "policy_obj": obj,
+        "kl_ref": kl,
+        "adv_mean": adv.mean(),
+        "adv_std": adv.std(),
+        "ratio_mean": (ratio * mask).sum() / jnp.maximum(mask.sum(), 1.0),
+        "clip_frac": (clipped * mask).sum() / jnp.maximum(mask.sum(), 1.0),
+        "reward_mean": roll.rewards.mean(),
+    }
+    return loss, metrics

@@ -1,0 +1,330 @@
+"""Block-diffusion attention-mask algebra (the paper's §4.1 / Fig. 4).
+
+The central object is a *duplicated sequence*::
+
+    [ copy A : clean tokens (prompt + output), length L ]
+    [ copy B : all-[MASK] "query row" over the same positions ]
+
+with per-position metadata (copy, block, step, pos, valid).  ``step`` is the
+denoise step at which the token at that position was revealed:
+
+* SFT: a sampled binary map — 0 for tokens kept visible at the sampled
+  noise level, 1 for tokens that were masked (the loss positions).
+* RL: the *actual decode trajectory* recorded by the rollout engine
+  (token j was revealed at step ``s_j`` of its block).
+
+The visibility predicate reproduces, for every copy-B query at position j
+(block k, step s_j), exactly the input the inference denoiser saw at step
+``s_j``:
+
+* copy-A keys: committed blocks ``blk < k`` — plus same-block tokens
+  revealed strictly before (``step < s_j``);
+* copy-B keys: same-block positions still masked at that step
+  (``step >= s_j``), including j itself — their value stream is the [MASK]
+  embedding with the correct positional encoding, exactly as at inference.
+
+Copy-A queries use plain block-causal attention (full bidirectional inside
+the block), matching the KV-cache semantics of committed blocks.
+
+One forward pass over the 2L sequence therefore yields *unbiased* logits
+for every output token at its own decode step — the property DiPO needs
+(paper Eq. 6) and the SFT NELBO needs (paper Eq. 3).  The same predicate
+family expresses the TraceRL baseline mask (Fig. 4a: only the output is
+duplicated) via a different layout builder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+MASK_TOKEN_STEP_SENTINEL = jnp.iinfo(jnp.int32).max // 2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SeqMeta:
+    """Per-position metadata of a packed (possibly duplicated) sequence.
+
+    All fields are int32/bool arrays of shape (..., T) where T is the packed
+    length.  ``copy``: 0 = clean copy A, 1 = mask-row copy B.  ``block``:
+    diffusion-block index (``pos // block_size``).  ``step``: reveal step of
+    the token at that position.  ``pos``: absolute position id (drives RoPE
+    and sliding windows).  ``valid``: padding flag.
+    """
+
+    copy: jax.Array
+    block: jax.Array
+    step: jax.Array
+    pos: jax.Array
+    valid: jax.Array
+
+    @property
+    def length(self) -> int:
+        return self.copy.shape[-1]
+
+    def slice_t(self, start: int, size: int) -> "SeqMeta":
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, size, axis=-1)
+        return SeqMeta(*(sl(getattr(self, f.name))
+                         for f in dataclasses.fields(self)))
+
+
+def visibility(q: SeqMeta, k: SeqMeta, *, window: int | None = None,
+               strict: bool = False) -> jax.Array:
+    """Dense visibility mask, shape (..., Tq, Tk) bool.
+
+    This is the oracle form of the predicate; the Pallas kernel evaluates
+    the same algebra per tile (see ``repro/kernels/block_diff_attn.py``).
+
+    ``strict=False`` (mask-row semantics): copy-B queries see same-block
+    copy-A keys revealed strictly before their step, and copy-B keys still
+    masked at it.  One all-[MASK] row gives every token a conditional at
+    its own reveal step, with revealed intra-block keys taken from the
+    *clean* stream (a committed-KV approximation of the sequential
+    engine — see trajectory.py for the exactness discussion).
+
+    ``strict=True`` (per-copy semantics): copy-B queries see strictly
+    previous copy-A blocks plus *exactly* their own copy (same block id
+    AND same step id).  Used by the noised SFT layout (steps all 0) and
+    the packed per-step RL layout, both of which carry the historical
+    block inputs inside copy B itself — bit-exact vs. the inference
+    engine.
+    """
+    qc, kc = q.copy[..., :, None], k.copy[..., None, :]
+    qb, kb = q.block[..., :, None], k.block[..., None, :]
+    qs, ks = q.step[..., :, None], k.step[..., None, :]
+    qp, kp = q.pos[..., :, None], k.pos[..., None, :]
+
+    k_is_a = kc == 0
+    k_is_b = kc == 1
+
+    # copy-A queries: block-causal over copy A (full inside own block).
+    vis_a_query = k_is_a & (kb <= qb)
+
+    # copy-B queries (the unbiased-logit rows).
+    if strict:
+        ctx = k_is_a & (kb < qb)
+        own = k_is_b & (kb == qb) & (ks == qs)
+    else:
+        ctx = k_is_a & ((kb < qb) | ((kb == qb) & (ks < qs)))
+        own = k_is_b & (kb == qb) & (ks >= qs)
+    vis_b_query = ctx | own
+
+    vis = jnp.where(qc[..., :, :] == 0, vis_a_query, vis_b_query)
+
+    if window is not None:
+        vis = vis & ((qp - kp) < window)
+
+    vis = vis & q.valid[..., :, None] & k.valid[..., None, :]
+    return vis
+
+
+def block_causal_visibility(q: SeqMeta, k: SeqMeta, *,
+                            window: int | None = None) -> jax.Array:
+    """Plain committed-context mask (prefill / KV commit pass)."""
+    vis = k.block[..., None, :] <= q.block[..., :, None]
+    if window is not None:
+        vis = vis & ((q.pos[..., :, None] - k.pos[..., None, :]) < window)
+    return vis & q.valid[..., :, None] & k.valid[..., None, :]
+
+
+# ---------------------------------------------------------------------------
+# Layout builders
+# ---------------------------------------------------------------------------
+
+
+def _base_meta(L: int, block_size: int, valid: jax.Array,
+               step: jax.Array, copy_id: int) -> SeqMeta:
+    pos = jnp.arange(L, dtype=jnp.int32)
+    blk = pos // block_size
+    return SeqMeta(copy=jnp.full((L,), copy_id, jnp.int32),
+                   block=blk, step=step.astype(jnp.int32),
+                   pos=pos, valid=valid)
+
+
+def _bcast(meta: SeqMeta, batch_shape) -> SeqMeta:
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, batch_shape + a.shape), meta)
+
+
+def dirl_layout(tokens: jax.Array, steps: jax.Array, valid: jax.Array,
+                *, block_size: int, mask_token: int, noised: bool = False
+                ) -> tuple[jax.Array, SeqMeta, jax.Array]:
+    """Paper Fig. 4b — prompt AND output duplicated blockwise.
+
+    Two flavours:
+
+    * ``noised=False`` (mask-row): copy B is all-[MASK]; per-position
+      ``steps`` drive intra-block visibility, giving every token its
+      exact own-decode-step conditional (DiPO / RL logits).  Attention
+      backbones only.
+    * ``noised=True``: copy B carries the *noised* tokens (real where
+      ``steps == 0``, [MASK] where masked) and intra-block visibility is
+      total (steps zeroed).  This is the literal Fig. 4b SFT layout and is
+      exact for SSM/hybrid backbones too (revealed tokens enter through
+      the recurrence input, not through attention).
+
+    tokens/steps/valid: (B, L).  Returns (input_ids (B, 2L), meta (B, 2L),
+    b_row_index (L,) mapping original position -> index of its copy-B slot).
+    """
+    B, L = tokens.shape
+    ids_a = tokens
+    if noised:
+        ids_b = jnp.where(steps > 0, mask_token, tokens)
+        meta_steps = jnp.zeros_like(steps)
+    else:
+        ids_b = jnp.full_like(tokens, mask_token)
+        meta_steps = steps
+    input_ids = jnp.concatenate([ids_a, ids_b], axis=-1)
+
+    pos = jnp.arange(L, dtype=jnp.int32)
+    blk = pos // block_size
+    mk = lambda c: SeqMeta(
+        copy=jnp.broadcast_to(jnp.full((L,), c, jnp.int32), (B, L)),
+        block=jnp.broadcast_to(blk, (B, L)),
+        step=meta_steps.astype(jnp.int32),
+        pos=jnp.broadcast_to(pos, (B, L)),
+        valid=valid)
+    meta = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=-1),
+                        mk(0), mk(1))
+    return input_ids, meta, jnp.arange(L, dtype=jnp.int32) + L
+
+
+def tracer_layout(tokens: jax.Array, steps: jax.Array, valid: jax.Array,
+                  *, block_size: int, mask_token: int, prompt_len: int
+                  ) -> tuple[jax.Array, SeqMeta, jax.Array]:
+    """TraceRL baseline (Fig. 4a) — only the output region is duplicated.
+
+    ``prompt_len`` must be a static int (the layout shape depends on it);
+    ragged prompts are handled by rounding prompts up to block boundaries
+    and padding, as the serving engine does.
+    """
+    B, L = tokens.shape
+    Lo = L - prompt_len
+    ids_b = jnp.full((B, Lo), mask_token, tokens.dtype)
+    input_ids = jnp.concatenate([tokens, ids_b], axis=-1)
+
+    pos = jnp.arange(L, dtype=jnp.int32)
+    blk = pos // block_size
+    meta_a = SeqMeta(
+        copy=jnp.broadcast_to(jnp.zeros((L,), jnp.int32), (B, L)),
+        block=jnp.broadcast_to(blk, (B, L)),
+        step=steps.astype(jnp.int32),
+        pos=jnp.broadcast_to(pos, (B, L)),
+        valid=valid)
+    meta_b = SeqMeta(
+        copy=jnp.broadcast_to(jnp.ones((Lo,), jnp.int32), (B, Lo)),
+        block=jnp.broadcast_to(blk[prompt_len:], (B, Lo)),
+        step=steps[:, prompt_len:].astype(jnp.int32),
+        pos=jnp.broadcast_to(pos[prompt_len:], (B, Lo)),
+        valid=valid[:, prompt_len:])
+    meta = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=-1),
+                        meta_a, meta_b)
+    b_index = jnp.arange(Lo, dtype=jnp.int32) + L
+    return input_ids, meta, b_index
+
+
+def plain_layout(tokens: jax.Array, valid: jax.Array, *, block_size: int
+                 ) -> SeqMeta:
+    """Committed-context layout (prefill / cache commit), copy A only."""
+    B, L = tokens.shape
+    pos = jnp.arange(L, dtype=jnp.int32)
+    return SeqMeta(
+        copy=jnp.zeros((B, L), jnp.int32),
+        block=jnp.broadcast_to(pos // block_size, (B, L)),
+        step=jnp.zeros((B, L), jnp.int32),
+        pos=jnp.broadcast_to(pos, (B, L)),
+        valid=valid)
+
+
+def packed_layout(tokens: jax.Array, steps: jax.Array, valid: jax.Array,
+                  *, block_size: int, mask_token: int, s_max: int
+                  ) -> tuple[jax.Array, SeqMeta, jax.Array, jax.Array]:
+    """Exact per-step RL layout: clean copy + one noised copy of every
+    block *per denoise step*, packed into a single sequence.
+
+    Layout: [A(0:L) ; copy(k=0,s=0) ; copy(0,1) ; ... ; copy(K-1,s_max-1)],
+    total L * (1 + s_max).  Copy (k, s) carries the block's historical
+    input at step s (tokens revealed strictly before s, [MASK] elsewhere);
+    under the ``strict`` predicate it attends only blocks < k of copy A
+    plus itself — exactly the inference denoiser input of that step.
+    Equivalent to replay, in ONE attention-friendly forward.
+
+    Returns (input_ids (B, L(1+s_max)), meta, sel (B, K, s_max, bsz) bool
+    marking each token's own-step slot, blk_tok (B, K, s_max, bsz) target
+    ids broadcast per step).
+    """
+    B, L = tokens.shape
+    K = L // block_size
+    blk_tok = tokens.reshape(B, K, 1, block_size)
+    blk_tok = jnp.broadcast_to(blk_tok, (B, K, s_max, block_size))
+    blk_steps = steps.reshape(B, K, 1, block_size)
+    blk_steps = jnp.broadcast_to(blk_steps, (B, K, s_max, block_size))
+    s_grid = jnp.arange(s_max, dtype=jnp.int32)[None, None, :, None]
+    ids_copies = jnp.where(blk_steps >= s_grid, mask_token, blk_tok)
+    sel = blk_steps == s_grid
+
+    input_ids = jnp.concatenate(
+        [tokens, ids_copies.reshape(B, K * s_max * block_size)], axis=-1)
+
+    pos = jnp.arange(L, dtype=jnp.int32)
+    blkid = pos // block_size
+    meta_a = SeqMeta(copy=jnp.zeros((B, L), jnp.int32),
+                     block=jnp.broadcast_to(blkid, (B, L)),
+                     step=steps.astype(jnp.int32),
+                     pos=jnp.broadcast_to(pos, (B, L)),
+                     valid=valid)
+    cop_block = jnp.broadcast_to(
+        jnp.arange(K, dtype=jnp.int32)[:, None, None],
+        (K, s_max, block_size)).reshape(-1)
+    cop_step = jnp.broadcast_to(
+        jnp.arange(s_max, dtype=jnp.int32)[None, :, None],
+        (K, s_max, block_size)).reshape(-1)
+    cop_pos = jnp.broadcast_to(
+        pos.reshape(K, 1, block_size), (K, s_max, block_size)).reshape(-1)
+    blk_valid = valid.reshape(B, K, 1, block_size)
+    cop_valid = jnp.broadcast_to(blk_valid,
+                                 (B, K, s_max, block_size)).reshape(B, -1)
+    Tc = K * s_max * block_size
+    meta_b = SeqMeta(copy=jnp.ones((B, Tc), jnp.int32),
+                     block=jnp.broadcast_to(cop_block, (B, Tc)),
+                     step=jnp.broadcast_to(cop_step, (B, Tc)),
+                     pos=jnp.broadcast_to(cop_pos, (B, Tc)),
+                     valid=cop_valid)
+    meta = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=-1),
+                        meta_a, meta_b)
+    return input_ids, meta, sel, blk_tok
+
+
+# ---------------------------------------------------------------------------
+# SFT noising (forward process, paper §2.1)
+# ---------------------------------------------------------------------------
+
+
+def sample_sft_noise(key: jax.Array, tokens: jax.Array, prompt_mask: jax.Array,
+                     valid: jax.Array, *, block_size: int
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample the masked-diffusion forward process blockwise.
+
+    Per block, draw t ~ U(0,1]; each *output* token in the block is masked
+    independently with probability t (linear schedule alpha_t = 1 - t).
+    Returns (steps (B,L) int32 in {0,1}, loss_weight (B,L) f32 = 1/t on
+    masked output tokens else 0, t_per_block (B,K)).
+
+    Guarantees >= masking of at least one token per block is NOT enforced;
+    the NELBO estimator stays unbiased either way.
+    """
+    B, L = tokens.shape
+    K = L // block_size
+    kt, km = jax.random.split(key)
+    t_blk = jax.random.uniform(kt, (B, K), minval=1e-3, maxval=1.0)
+    t_tok = jnp.repeat(t_blk, block_size, axis=-1)
+    u = jax.random.uniform(km, (B, L))
+    maskable = valid & ~prompt_mask
+    masked = (u < t_tok) & maskable
+    steps = masked.astype(jnp.int32)
+    weight = jnp.where(masked, 1.0 / t_tok, 0.0)
+    return steps, weight, t_blk

@@ -1,0 +1,210 @@
+"""Unbiased trajectory log-probabilities (the heart of DiPO, paper §3.2).
+
+The rollout engine records, for every generated token, the denoise step at
+which it was revealed.  DiPO needs  log pi(o_k | tau(1:t-1))  — the token's
+probability under *exactly* the inputs the denoiser saw at its own reveal
+step.  Two equivalent computations:
+
+* ``fused``  — ONE forward over the duplicated mask-row layout.  Copy B is
+  all-[MASK]; the step-comparison mask reconstructs, for every query, the
+  precise mix of revealed (copy-A) and still-masked (copy-B) same-block
+  keys of its reveal step.  O(2L) tokens total.  Exact for attention
+  mixers (information flows only through attention).
+
+* ``replay`` — literal re-execution: prefill the clean sequence (caches +
+  SSM block-boundary states), then for every (block, step) run one
+  decode_step with the historical block inputs.  O(L * S_max) tokens.
+  Required for SSM/hybrid backbones (revealed tokens enter through the
+  recurrence input stream, which one fused pass cannot represent for
+  more than one step per block) — and doubles as the oracle the fused
+  path is tested against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .masks import SeqMeta, dirl_layout, plain_layout
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RolloutBatch:
+    """Flattened group rollouts (P prompts x G samples = B rows).
+
+    tokens   (B, L)  full sequences (prompt ++ generation, padded)
+    steps    (B, L)  int32 reveal step of each token within its block
+    prompt_mask (B, L) bool  True on prompt (and pad-to-block) positions
+    valid    (B, L)  bool    False beyond each sequence's end
+    rewards  (B,)    f32
+    group    (B,)    int32   prompt index (for group-relative advantages)
+    """
+
+    tokens: jax.Array
+    steps: jax.Array
+    prompt_mask: jax.Array
+    valid: jax.Array
+    rewards: jax.Array
+    group: jax.Array
+
+    @property
+    def loss_mask(self) -> jax.Array:
+        return self.valid & ~self.prompt_mask
+
+
+def gather_logp(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# fused path (attention backbones)
+# ---------------------------------------------------------------------------
+
+
+def trajectory_logprobs_fused(model, params, roll: RolloutBatch, *,
+                              memory=None, memory_valid=None) -> jax.Array:
+    """(B, L) log-prob of every token at its own reveal step, one forward."""
+    cfg = model.cfg
+    L = roll.tokens.shape[1]
+    ids, meta, _ = dirl_layout(
+        roll.tokens, roll.steps, roll.valid, block_size=cfg.block_size,
+        mask_token=cfg.resolved_mask_token, noised=False)
+    logits_b, _ = model.forward_masked(params, ids, meta, dup_len=L,
+                                       memory=memory,
+                                       memory_valid=memory_valid,
+                                       logits_from=L)
+    return gather_logp(logits_b, roll.tokens)
+
+
+# ---------------------------------------------------------------------------
+# packed path: exact AND one forward (attention backbones)
+# ---------------------------------------------------------------------------
+
+
+def trajectory_logprobs_packed(model, params, roll: RolloutBatch, *,
+                               s_max: int, memory=None,
+                               memory_valid=None) -> jax.Array:
+    """(B, L) exact per-step log-probs in ONE forward.
+
+    Packs the clean sequence plus s_max noised copies of every block into a
+    single layout under the strict predicate (masks.packed_layout).  Each
+    copy reproduces the literal inference input of its step, so this is
+    bit-equivalent to replay for attention backbones — at one kernel
+    launch instead of K*s_max sequential decode calls.  This goes beyond
+    the paper's Fig. 4b (which is exact for the SFT single-noise-level
+    case); see DESIGN.md §7.
+    """
+    from .masks import packed_layout
+    cfg = model.cfg
+    B, L = roll.tokens.shape
+    bsz = cfg.block_size
+    K = L // bsz
+    ids, meta, sel, blk_tok = packed_layout(
+        roll.tokens, roll.steps, roll.valid, block_size=bsz,
+        mask_token=cfg.resolved_mask_token, s_max=s_max)
+    logits_b, _ = model.forward_masked(params, ids, meta, strict=True,
+                                       memory=memory,
+                                       memory_valid=memory_valid,
+                                       logits_from=L)
+    lg_copies = logits_b.reshape(B, K, s_max, bsz, -1)
+    lp = gather_logp(lg_copies, blk_tok)              # (B, K, s_max, bsz)
+    lp = jnp.where(sel, lp, 0.0).sum(axis=2)          # own-step slot only
+    return lp.reshape(B, L)
+
+
+# ---------------------------------------------------------------------------
+# replay path (SSM / hybrid backbones; also the oracle)
+# ---------------------------------------------------------------------------
+
+
+def _merge_boundary_states(caches, bounds, k):
+    """Replace SSM state entries in ``caches`` with the block-k boundary
+    states collected during prefill.  groups bounds have leading (G, K),
+    prefix bounds leading (K,)."""
+    def merge_layer(cache, bd, grouped):
+        if bd is None or cache is None:
+            return cache
+        new = dict(cache)
+        for skey, arr in bd.items():
+            new[skey] = arr[:, k] if grouped else arr[k]
+        return new
+
+    out = {"prefix": {}, "groups": {}}
+    for lk, cache in caches["prefix"].items():
+        out["prefix"][lk] = merge_layer(cache, bounds["prefix"].get(lk),
+                                        grouped=False)
+    for lk, cache in caches["groups"].items():
+        out["groups"][lk] = merge_layer(cache, bounds["groups"].get(lk),
+                                        grouped=True)
+    return out
+
+
+def trajectory_logprobs_replay(model, params, roll: RolloutBatch, *,
+                               s_max: int, memory=None, memory_valid=None
+                               ) -> jax.Array:
+    """(B, L) log-probs via literal per-step decode replay.
+
+    ``s_max`` = max denoise steps per block used by the rollout (static).
+    """
+    cfg = model.cfg
+    B, L = roll.tokens.shape
+    bsz = cfg.block_size
+    K = L // bsz
+    MASK = cfg.resolved_mask_token
+
+    meta_p = plain_layout(roll.tokens, roll.valid, block_size=bsz)
+    # ring=False: replay revisits every block, so sliding-window layers
+    # need the full-length buffer (the serving ring would have evicted
+    # early blocks' keys)
+    caches = model.make_caches(B, L, ring=False)
+    _, out = model.forward_masked(params, roll.tokens, meta_p,
+                                  caches=caches, want_boundaries=True,
+                                  memory=memory, memory_valid=memory_valid)
+    caches_full, bounds = out["caches"], out["boundaries"]
+
+    tok_blk = roll.tokens.reshape(B, K, bsz)
+    step_blk = roll.steps.reshape(B, K, bsz)
+    base_pos = jnp.arange(bsz, dtype=jnp.int32)
+
+    def one(ks):
+        k, s = ks // s_max, ks % s_max
+        tk = tok_blk[:, k]                       # (B, bsz)
+        sk = step_blk[:, k]
+        blk_ids = jnp.where(sk >= s, MASK, tk)   # revealed strictly before s
+        pos = jnp.broadcast_to(k * bsz + base_pos, (B, bsz))
+        cc = _merge_boundary_states(caches_full, bounds, k)
+        lg, _ = model.decode_step(params, blk_ids, pos, cc,
+                                  cache_limit=k * bsz, memory=memory,
+                                  memory_valid=memory_valid)
+        lp = gather_logp(lg, tk)
+        return jnp.where(sk == s, lp, 0.0)       # (B, bsz)
+
+    parts = jax.lax.map(one, jnp.arange(K * s_max, dtype=jnp.int32))
+    logp = parts.reshape(K, s_max, B, bsz).sum(axis=1)   # one s per token
+    return logp.transpose(1, 0, 2).reshape(B, L)
+
+
+def trajectory_logprobs(model, params, roll: RolloutBatch, *,
+                        s_max: int, scheme: str = "auto", **kw) -> jax.Array:
+    """Dispatch.
+
+    scheme: "packed" (exact, one forward — attention backbones),
+    "replay" (exact, sequential — any backbone), "fused_approx" (one
+    2L forward, committed-KV approximation), or "auto" (packed for
+    attention, replay for SSM/hybrid).
+    """
+    if scheme == "auto":
+        scheme = "replay" if model.cfg.ssm_kind else "packed"
+    if scheme == "packed":
+        return trajectory_logprobs_packed(model, params, roll,
+                                          s_max=s_max, **kw)
+    if scheme == "replay":
+        return trajectory_logprobs_replay(model, params, roll,
+                                          s_max=s_max, **kw)
+    if scheme == "fused_approx":
+        return trajectory_logprobs_fused(model, params, roll, **kw)
+    raise ValueError(scheme)

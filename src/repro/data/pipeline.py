@@ -1,0 +1,102 @@
+"""Batching pipeline: tokenised, block-aligned batches for SFT and RL.
+
+Framework convention (shared by training and the serving engine): prompts
+are right-padded with PAD *up to the next block boundary*, so every
+sequence's generation starts at a block boundary and the attention/SSM
+block algebra never straddles a ragged prompt edge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Iterator
+
+import numpy as np
+
+from .math_tasks import MathProblem, sample_problem
+from .tokenizer import ByteTokenizer
+
+
+def pad_to_block(ids: list[int], block_size: int, pad_id: int) -> list[int]:
+    r = len(ids) % block_size
+    return ids + [pad_id] * (block_size - r) if r else ids
+
+
+@dataclasses.dataclass
+class SFTBatch:
+    tokens: np.ndarray       # (B, L) int32
+    prompt_mask: np.ndarray  # (B, L) bool
+    valid: np.ndarray        # (B, L) bool
+
+    def asdict(self):
+        return {"tokens": self.tokens, "prompt_mask": self.prompt_mask,
+                "valid": self.valid}
+
+
+@dataclasses.dataclass
+class PromptBatch:
+    prompt_tokens: np.ndarray  # (B, Lp) int32, block aligned
+    prompt_blocks: np.ndarray  # (B,) int32
+    answers: np.ndarray        # (B,) int64
+    texts: list[str]
+
+
+class MathTaskDataset:
+    """Deterministic synthetic stream of math problems."""
+
+    def __init__(self, tokenizer: ByteTokenizer, block_size: int,
+                 seq_len: int, seed: int = 0, level: int | None = None):
+        self.tok = tokenizer
+        self.block_size = block_size
+        self.seq_len = seq_len
+        self.rng = random.Random(seed)
+        self.level = level
+
+    def _encode_example(self, p: MathProblem
+                        ) -> tuple[list[int], int] | None:
+        prompt_ids = pad_to_block(
+            self.tok.encode(p.prompt, bos=True), self.block_size,
+            self.tok.pad_id)
+        body = self.tok.encode(f" {p.reasoning} #### {p.answer}", eos=True)
+        full = prompt_ids + body
+        if len(full) > self.seq_len:
+            return None
+        return full, len(prompt_ids)
+
+    def sft_batches(self, batch_size: int) -> Iterator[SFTBatch]:
+        while True:
+            toks = np.zeros((batch_size, self.seq_len), np.int32)
+            pmask = np.zeros((batch_size, self.seq_len), bool)
+            valid = np.zeros((batch_size, self.seq_len), bool)
+            for b in range(batch_size):
+                enc = None
+                while enc is None:
+                    enc = self._encode_example(
+                        sample_problem(self.rng, self.level))
+                full, plen = enc
+                # valid region padded to block boundary (with PAD ids)
+                vlen = len(pad_to_block(full, self.block_size,
+                                        self.tok.pad_id))
+                toks[b, :len(full)] = full
+                pmask[b, :plen] = True
+                valid[b, :vlen] = True
+            yield SFTBatch(toks, pmask, valid)
+
+    def prompt_batches(self, batch_size: int) -> Iterator[PromptBatch]:
+        """RL prompt stream; all prompts padded to the batch max blocks."""
+        while True:
+            probs = [sample_problem(self.rng, self.level)
+                     for _ in range(batch_size)]
+            encs = [pad_to_block(self.tok.encode(p.prompt, bos=True),
+                                 self.block_size, self.tok.pad_id)
+                    for p in probs]
+            lp = max(len(e) for e in encs)
+            toks = np.zeros((batch_size, lp), np.int32)
+            blocks = np.zeros((batch_size,), np.int32)
+            for b, e in enumerate(encs):
+                toks[b, :len(e)] = e
+                blocks[b] = len(e) // self.block_size
+            yield PromptBatch(toks, blocks,
+                              np.array([p.answer for p in probs]),
+                              [p.prompt for p in probs])

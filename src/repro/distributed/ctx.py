@@ -1,0 +1,60 @@
+"""Activation sharding hints.
+
+``shard_hint(x, *spec)`` applies a with_sharding_constraint when a mesh
+context is active (the dry-run / production path) and is a no-op on the
+single-device CPU test path.  Axis names that don't exist on the current
+mesh are dropped, so model code can say ("batch", None, None) once and
+have it mean (('pod','data'), ...) on the multi-pod mesh and ('data', ...)
+on the single-pod mesh.
+
+This is §Perf iteration 1: without these constraints GSPMD resolves the
+FSDP weight-sharding / batch-sharding conflict by *replicating the global
+batch* inside every layer (measured: 33.8 GiB all-reduces per FFN in the
+sdar-8b train step).  Pinning activations to batch sharding flips XLA to
+the intended strategy — all-gather the (small) weight shards instead.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+BATCH = "batch"  # symbolic: expands to the mesh's data-parallel axes
+
+
+def _current_mesh():
+    # `with mesh:` (the dry-run / launcher idiom) sets the legacy thread
+    # resource, not the new abstract-mesh context; check both.
+    m = jax.sharding.get_abstract_mesh()
+    if m is not None and not m.empty:
+        return m
+    try:
+        from jax._src.mesh import thread_resources
+        pm = thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def shard_hint(x, *spec):
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    out = []
+    for ax in spec:
+        if ax == BATCH:
+            out.append(dp if dp else None)
+        elif ax is None:
+            out.append(None)
+        else:
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            kept = tuple(a for a in axes if a in names)
+            out.append(kept if kept else None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*out))
+    except (ValueError, TypeError):
+        return x

@@ -1,0 +1,217 @@
+"""Partition rules: parameter-path regex -> PartitionSpec.
+
+Sharding philosophy (DESIGN.md §5):
+  * ``model``  — tensor axis: heads, ffn hidden, expert dim (E >= 16),
+                 vocab;
+  * ``data``   — FSDP axis: the *other* matrix dim of every large weight,
+                 so params & optimizer state scale with the full mesh
+                 (the ZeRO-1 analogue of the paper's DeepSpeed setup);
+  * ``pod``    — pure data parallel between pods (params replicated
+                 across pods; gradients all-reduce over DCN).
+
+Rules match on the path suffix and describe the TRAILING dims of the
+leaf; leading dims (the scanned-group axis G) are padded with None.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.modules import tree_paths
+
+D, M = "data", "model"
+
+
+def _rules(n_experts: int) -> list[tuple[str, P]]:
+    expert_parallel = n_experts >= 16
+    if expert_parallel:
+        eg = P(M, D, None)    # (E, d, f)
+        ed = P(M, None, D)    # (E, f, d)
+    else:
+        eg = P(None, D, M)
+        ed = P(None, M, D)
+    return [
+        # vocab over model; d replicated.  (Sharding d over data makes
+        # the unembed contract over a data-sharded dim, and GSPMD then
+        # replicates the full-batch logits — measured 69 GiB all-reduce
+        # in the sdar-8b train step.  See EXPERIMENTS.md §Perf iter 1.)
+        (r"embed/table$", P(M, None)),
+        (r"lm_head/w$", P(None, M)),
+        # attention / cross-attention
+        (r"(attn|cross)/w[qkv]/w$", P(D, M)),
+        (r"(attn|cross)/wo/w$", P(M, D)),
+        (r"attn/wq_a/w$", P(D, None)),
+        (r"attn/wq_b/w$", P(None, M)),
+        (r"attn/w_dkv/w$", P(D, None)),
+        (r"attn/w_kb/w$", P(None, M)),
+        (r"attn/w_vb/w$", P(None, M)),
+        (r"cross/gate$", P()),
+        # dense ffn / shared experts
+        (r"(ffn|shared)/w_(gate|up)/w$", P(D, M)),
+        (r"(ffn|shared)/w_down/w$", P(M, D)),
+        # MoE
+        (r"moe/router/w$", P(D, None)),
+        (r"experts/w_(gate|up)$", eg),
+        (r"experts/w_down$", ed),
+        # rwkv6
+        (r"rwkv/w[rkvg]/w$", P(D, M)),
+        (r"rwkv/wo/w$", P(M, D)),
+        (r"rwkv/lora_w1/w$", P(D, None)),
+        (r"rwkv/lora_w2$", P(None, None, M)),
+        (r"rwkv/w_lora1/w$", P(D, None)),
+        (r"rwkv/w_lora2/w$", P(None, M)),
+        (r"rwkv/w0$", P(M)),
+        (r"rwkv/u$", P(M, None)),
+        (r"rwkv/ln_(scale|bias)$", P(M, None)),
+        (r"rwkv/mu(_base)?$", P()),
+        # rwkv channel mix
+        (r"cm/wk/w$", P(D, M)),
+        (r"cm/wv/w$", P(M, D)),
+        (r"cm/wr/w$", P(D, M)),
+        (r"cm/mu_[kr]$", P()),
+        # mamba
+        (r"mamba/in_proj/w$", P(D, M)),
+        (r"mamba/conv_w$", P(None, M)),
+        (r"mamba/conv_b$", P(M)),
+        (r"mamba/w_xdt/w$", P(M, None)),
+        (r"mamba/w_dt/w$", P(None, M)),
+        (r"mamba/dt_bias$", P(M)),
+        (r"mamba/w_[BC]/w$", P(M, None)),
+        (r"mamba/A_log$", P(M, None)),
+        (r"mamba/D$", P(M)),
+        (r"mamba/out_proj/w$", P(M, D)),
+        # projector (modality frontend -> d_model)
+        (r"projector/w$", P(None, D)),
+        # norms and everything scalar: replicated
+        (r"(norm|ckv_norm|q_norm)/(scale|bias)$", P()),
+    ]
+
+
+def _pad_spec(spec: P, ndim: int) -> P:
+    pad = ndim - len(spec)
+    assert pad >= 0, (spec, ndim)
+    return P(*([None] * pad + list(spec)))
+
+
+def param_specs(params_shape, n_experts: int = 0):
+    """PartitionSpec pytree matching ``params_shape`` (shapes or arrays)."""
+    rules = _rules(n_experts)
+    flat = tree_paths(params_shape)
+    out = {}
+    for path, leaf in flat:
+        spec = None
+        for pat, sp in rules:
+            if re.search(pat, path):
+                spec = _pad_spec(sp, leaf.ndim)
+                break
+        if spec is None:
+            spec = P()  # replicate by default (norms, scalars)
+        out[path] = spec
+    # rebuild tree
+    leaves, treedef = jax.tree_util.tree_flatten(params_shape)
+    spec_leaves = [out[p] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, spec_leaves)
+
+
+def opt_state_specs(pspecs):
+    """Optimizer state mirrors param sharding; count replicated."""
+    return {"m": pspecs, "v": pspecs, "count": P()}
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes of this mesh (('pod','data') or ('data',))."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def train_batch_specs(mesh: Mesh):
+    dp = batch_axes(mesh)
+    return {"tokens": P(dp, None), "prompt_mask": P(dp, None),
+            "valid": P(dp, None)}
+
+
+def cache_specs(caches_shape, mesh: Mesh, *, shard_seq: bool):
+    """Shardings for decode caches.
+
+    Attention caches (B, S, Hkv, D): batch over dp, kv-heads over model
+    when they divide the axis; otherwise the SEQUENCE dim takes the model
+    axis (flash-decoding style partial attention — GSPMD inserts the
+    softmax-stat combine).  ``shard_seq`` (long_500k, batch 1): the
+    sequence dim shards over data (and over data+model when kv-heads
+    don't divide).  SSM states: batch over dp, channel dim over model.
+    """
+    dp = batch_axes(mesh)
+    msize = mesh.shape[M]
+
+    def spec_for(path: str, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if re.search(r"/(k|v)$", path) and leaf.ndim >= 4:
+            # stacked (G, B, S, Hkv, D) or plain (B, S, Hkv, D)
+            base = [None] * (leaf.ndim - 4)
+            hkv = leaf.shape[-2]
+            heads_shardable = hkv % msize == 0
+            if shard_seq:
+                if heads_shardable:
+                    return P(*base, None, D, M, None)
+                return P(*base, None, (D, M), None, None)
+            if heads_shardable:
+                return P(*base, dp, None, M, None)
+            return P(*base, dp, M, None, None)
+        if re.search(r"/pos$", path):
+            base = [None] * (leaf.ndim - 2)
+            if shard_seq:
+                return P(*base, None, D)
+            return P(*base, dp, None)
+        if re.search(r"/(wkv)$", path):      # (…, B, H, dk, dv)
+            base = [None] * (leaf.ndim - 4)
+            return P(*base, dp if not shard_seq else None, M, None, None)
+        if re.search(r"/(ssm)$", path):      # (…, B, di, ds)
+            base = [None] * (leaf.ndim - 3)
+            return P(*base, dp if not shard_seq else None, M, None)
+        if re.search(r"/(conv)$", path):     # (…, B, W-1, di)
+            base = [None] * (leaf.ndim - 3)
+            return P(*base, dp if not shard_seq else None, None, M)
+        if re.search(r"/(shift|cm_shift)$", path):  # (…, B, d)
+            base = [None] * (leaf.ndim - 2)
+            return P(*base, dp if not shard_seq else None, None)
+        return P()
+
+    flat = tree_paths(caches_shape)
+    leaves, treedef = jax.tree_util.tree_flatten(caches_shape)
+    spec_leaves = [spec_for(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, spec_leaves)
+
+
+def sanitize_specs(specs, shapes, mesh: Mesh):
+    """Drop sharding on any dim the mesh doesn't divide (e.g. seamless's
+    vocab 256206 on a 16-way axis) — jit in_shardings are strict about
+    divisibility, unlike lazy GSPMD constraints."""
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        out = []
+        for size, ax in zip(leaf.shape, dims):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            out.append(ax if size % total == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle attention for the block-diffusion mask.
+
+This is the reference every kernel run is checked against (dense O(T^2)
+mask materialisation).  Scores accumulate in f32 via
+``preferred_element_type`` — inputs are never cast up-front, so bf16
+caches are not duplicated in f32 (XLA would hoist such casts out of the
+layer scan and hold every layer's copy live at once).
+
+Layout convention throughout the kernels package:
+
+    q        : (B, Lq, H, D)
+    k, v     : (B, Lk, Hkv, Dv)     (GQA: H % Hkv == 0)
+    mask     : (B, Lq, Lk) bool     (True = visible)
+    returns  : (B, Lq, H, Dv)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array | None, *,
+                  scale: float | None = None,
+                  softcap: float | None = None) -> jax.Array:
+    B, Lq, H, D = q.shape
+    Hkv = k.shape[2]
+    Dv = v.shape[3]
+    assert H % Hkv == 0, (H, Hkv)
+    g = H // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    qh = q.reshape(B, Lq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if mask is not None:
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    # rows with no visible key: make them uniform (output is garbage but
+    # finite; callers mask the loss).
+    p = jax.nn.softmax(s, axis=-1)
+    if mask is not None:
+        allmasked = ~jnp.any(mask, axis=-1)  # (B, Lq)
+        p = jnp.where(allmasked[:, None, None, :, None], 0.0, p)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Lq, H, Dv).astype(q.dtype)

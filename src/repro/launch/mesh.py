@@ -1,0 +1,23 @@
+"""Production mesh definitions (deliverable e, step 1).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so 512 placeholder host devices exist; real deployments get the
+same shapes from the TPU slice topology.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh over the single real device (CPU tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,100 @@
+"""The lowered step functions (train_step / prefill_step / serve_step) and
+their ShapeDtypeStruct input specs for every (arch x input-shape) combo."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.block_diffusion import sft_loss
+from repro.core.masks import plain_layout
+from repro.models.model import BlockDiffLM
+from repro.optim import adamw
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def make_train_step(model: BlockDiffLM, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch, rng):
+        def loss_fn(p):
+            return sft_loss(model, p, batch, rng)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+    return train_step
+
+
+def make_prefill_step(model: BlockDiffLM):
+    def prefill_step(params, tokens, valid, caches, memory=None):
+        meta = plain_layout(tokens, valid,
+                            block_size=model.cfg.block_size)
+        logits, out = model.forward_masked(params, tokens, meta,
+                                           caches=caches, memory=memory)
+        return logits, out["caches"]
+    return prefill_step
+
+
+def make_serve_step(model: BlockDiffLM):
+    def serve_step(params, block_ids, positions, caches, cache_limit,
+                   memory=None):
+        return model.decode_step(params, block_ids, positions, caches,
+                                 cache_limit=cache_limit, memory=memory)
+    return serve_step
+
+
+def input_specs(arch: str, shape_name: str, *, dtype: str = "bfloat16",
+                opt_cfg: adamw.AdamWConfig | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step.
+
+    Returns {"cfg", "model", "kind", "args": tuple_of_SDS, "params",
+    "opt_state"} — weak-type-correct, shardable, no device allocation.
+    Modality frontends contribute precomputed embedding stand-ins (the
+    allowed stub).
+    """
+    shp = configs.INPUT_SHAPES[shape_name]
+    cfg = configs.get_config(arch, dtype=dtype, param_dtype=dtype,
+                             remat=True, attn_impl="structured",
+                             moe_groups=32)
+    model = BlockDiffLM(cfg)
+    params = jax.eval_shape(
+        functools.partial(model.init), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    B, L = shp.global_batch, shp.seq_len
+    bsz = cfg.block_size
+    out = {"cfg": cfg, "model": model, "kind": shp.kind, "params": params}
+
+    memory = None
+    if cfg.n_extra_tokens:
+        memory = sds((B, cfg.n_extra_tokens, cfg.d_model), dtype)
+    out["memory"] = memory
+
+    if shp.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        opt_state = jax.eval_shape(
+            functools.partial(adamw.init_state, opt_cfg), params)
+        batch = {"tokens": sds((B, L), "int32"),
+                 "prompt_mask": sds((B, L), "bool"),
+                 "valid": sds((B, L), "bool")}
+        if memory is not None:
+            batch["memory"] = memory
+        out.update(opt_state=opt_state, batch=batch,
+                   rng=sds((2,), "uint32"), opt_cfg=opt_cfg)
+    elif shp.kind == "prefill":
+        caches = jax.eval_shape(
+            functools.partial(model.make_caches, B, L))
+        out.update(tokens=sds((B, L), "int32"), valid=sds((B, L), "bool"),
+                   caches=caches)
+    else:  # decode
+        caches = jax.eval_shape(
+            functools.partial(model.make_caches, B, L))
+        out.update(block_ids=sds((B, bsz), "int32"),
+                   positions=sds((B, bsz), "int32"),
+                   caches=caches, cache_limit=sds((B,), "int32"))
+    return out

@@ -1,0 +1,300 @@
+"""Attention sublayers: GQA (+SWA, softcap), absorbed MLA, cross-attention.
+
+Every mixer supports three execution modes (see model.py):
+
+* ``dup``    — one fused pass over the duplicated sequence under the
+               block-diffusion mask (the paper's §4.1 fast path);
+* ``plain``  — committed-context (block-causal) pass; optionally fills the
+               KV cache (prefill / block commit);
+* ``decode`` — current-block queries against (cache ++ self-block) keys,
+               the inference denoise step.
+
+KV caches store *rotated* keys with explicit position ids so sliding-window
+ring buffers and sequence-sharded caches need no extra bookkeeping:
+``pos < 0`` marks unfilled slots.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import SeqMeta, visibility
+from repro.kernels import ops as kops
+from repro.kernels.ref import mha_reference, NEG_INF
+from .config import ModelConfig
+from .modules import apply_rope, init_linear, linear, rmsnorm, split_like
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array    # (B, S, Hkv, Dk) rotated
+    v: jax.Array    # (B, S, Hkv, Dv)
+    pos: jax.Array  # (B, S) int32, -1 = empty
+
+
+def make_attn_cache(batch: int, seq: int, n_kv: int, dk: int, dv: int,
+                    dtype) -> AttnCache:
+    return AttnCache(
+        k=jnp.zeros((batch, seq, n_kv, dk), dtype),
+        v=jnp.zeros((batch, seq, n_kv, dv), dtype),
+        pos=jnp.full((batch, seq), -1, jnp.int32))
+
+
+def cache_write(cache: AttnCache, k: jax.Array, v: jax.Array,
+                positions: jax.Array) -> AttnCache:
+    """Write a block of (rotated) keys at ``positions`` (B, n).
+
+    Full caches write at index == position; ring caches (S < max positions)
+    write at position % S — both are the same modulo op.
+    """
+    S = cache.k.shape[1]
+    idx = positions % S  # (B, n)
+    bidx = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+    return AttnCache(
+        k=cache.k.at[bidx, idx].set(k.astype(cache.k.dtype)),
+        v=cache.v.at[bidx, idx].set(v.astype(cache.v.dtype)),
+        pos=cache.pos.at[bidx, idx].set(positions.astype(jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_like(key, ["wq", "wk", "wv", "wo"])
+    return {
+        "wq": init_linear(ks["wq"], d, H * Dh, dtype=dt),
+        "wk": init_linear(ks["wk"], d, Hkv * Dh, dtype=dt),
+        "wv": init_linear(ks["wv"], d, Hkv * Dh, dtype=dt),
+        "wo": init_linear(ks["wo"], H * Dh, d, dtype=dt),
+    }
+
+
+def _gqa_scale(cfg: ModelConfig) -> float:
+    return cfg.query_scale or cfg.resolved_head_dim ** -0.5
+
+
+def gqa_qkv(p, x, positions, cfg: ModelConfig):
+    B, T, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(B, T, H, Dh)
+    k = linear(p["wk"], x).reshape(B, T, Hkv, Dh)
+    v = linear(p["wv"], x).reshape(B, T, Hkv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_masked(p, x, meta: SeqMeta, cfg: ModelConfig, *,
+               window: int | None, dup_len: int | None,
+               strict: bool = False
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """dup / plain modes: mask comes from SeqMeta.
+
+    Returns (out, k, v) so prefill can write the cache."""
+    B, T, _ = x.shape
+    q, k, v = gqa_qkv(p, x, meta.pos, cfg)
+    softcap = cfg.attn_logit_softcap or None
+    o = kops.attention(
+        q, k, v, meta, meta,
+        impl=cfg.attn_impl,
+        scale=_gqa_scale(cfg), softcap=softcap, window=window,
+        strict=strict, dup_len=dup_len, block_size=cfg.block_size)
+    return linear(p["wo"], o.reshape(B, T, -1)), k, v
+
+
+def _cache_decode_attention(q, keys, vals, key_pos, key_valid, q_pos, *,
+                            scale, softcap, window):
+    """q (B,n,H,Dk) vs gathered keys (B,S',Hkv,Dk) with validity mask."""
+    mask = key_valid[:, None, :]                       # (B, 1, S')
+    mask = jnp.broadcast_to(mask, (q.shape[0], q.shape[1], keys.shape[1]))
+    if window is not None:
+        mask = mask & ((q_pos[:, :, None] - key_pos[:, None, :]) < window)
+    return mha_reference(q, keys, vals, mask, scale=scale, softcap=softcap)
+
+
+def _decode_key_mask(cache: AttnCache, positions, cache_limit):
+    """validity of (cache ++ self) keys given a per-sequence cache limit."""
+    cvalid = cache.pos >= 0
+    if cache_limit is not None:
+        lim = jnp.asarray(cache_limit)
+        if lim.ndim == 0:
+            lim = lim[None]
+        cvalid = cvalid & (cache.pos < lim[:, None])
+    svalid = jnp.ones(positions.shape, bool)
+    return jnp.concatenate([cvalid, svalid], axis=1)
+
+
+def gqa_decode(p, x, positions, cache: AttnCache, cfg: ModelConfig, *,
+               window: int | None, write_cache: bool,
+               cache_limit=None) -> tuple[jax.Array, AttnCache]:
+    """decode mode: block queries vs cache ++ self-block (bidirectional)."""
+    B, n, _ = x.shape
+    q, k_self, v_self = gqa_qkv(p, x, positions, cfg)
+    keys = jnp.concatenate([cache.k.astype(k_self.dtype), k_self], axis=1)
+    vals = jnp.concatenate([cache.v.astype(v_self.dtype), v_self], axis=1)
+    key_pos = jnp.concatenate([cache.pos, positions.astype(jnp.int32)], axis=1)
+    key_valid = _decode_key_mask(cache, positions, cache_limit)
+    o = _cache_decode_attention(
+        q, keys, vals, key_pos, key_valid, positions,
+        scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
+        window=window)
+    new_cache = cache_write(cache, k_self, v_self, positions) \
+        if write_cache else cache
+    return linear(p["wo"], o.reshape(B, n, -1)), new_cache
+
+
+def write_prefill_cache(cache: AttnCache, k, v, positions) -> AttnCache:
+    """Write a full prefill's keys into a (possibly ring) cache buffer.
+
+    If the buffer is shorter than the sequence (sliding-window ring), only
+    the last S entries are written (earlier ones would be overwritten
+    anyway, and .at[].set with duplicate indices is unspecified)."""
+    S = cache.k.shape[1]
+    if k.shape[1] > S:
+        k, v, positions = k[:, -S:], v[:, -S:], positions[:, -S:]
+    return cache_write(cache, k, v, positions)
+
+
+# ---------------------------------------------------------------------------
+# MLA (absorbed form — attention runs over the 576-d latent, MQA-style)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r, nope, rope, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                         cfg.qk_rope_dim, cfg.v_head_dim)
+    dt = jnp.dtype(cfg.param_dtype)
+    names = ["wq_a", "wq_b", "w_dkv", "w_kb", "w_vb", "wo"]
+    ks = split_like(key, names)
+    qin = cfg.q_lora_rank or d
+    p = {
+        "w_dkv": init_linear(ks["w_dkv"], d, r + rope, dtype=dt),
+        "ckv_norm": {"scale": jnp.zeros((r,), dt)},
+        "w_kb": init_linear(ks["w_kb"], r, H * nope, dtype=dt),
+        "w_vb": init_linear(ks["w_vb"], r, H * dv, dtype=dt),
+        "wo": init_linear(ks["wo"], H * dv, d, dtype=dt),
+        "wq_b": init_linear(ks["wq_b"], qin, H * (nope + rope), dtype=dt),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = init_linear(ks["wq_a"], d, cfg.q_lora_rank, dtype=dt)
+        p["q_norm"] = {"scale": jnp.zeros((cfg.q_lora_rank,), dt)}
+    return p
+
+
+def _mla_q_latent(p, x, positions, cfg: ModelConfig):
+    """Absorbed queries: q' = [q_nope @ W_kb^T, rope(q_rope)], (B,T,H,r+rope)."""
+    B, T, _ = x.shape
+    H, r = cfg.n_heads, cfg.kv_lora_rank
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    xq = x
+    if cfg.q_lora_rank:
+        xq = rmsnorm(p["q_norm"], linear(p["wq_a"], x), eps=cfg.norm_eps)
+    q = linear(p["wq_b"], xq).reshape(B, T, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    wkb = p["w_kb"]["w"].reshape(r, H, nope)
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                       wkb.astype(jnp.float32)).astype(x.dtype)
+    return jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,T,H,r+rope)
+
+
+def _mla_kv_latent(p, x, positions, cfg: ModelConfig):
+    """Latent keys/values: k' = [rms(ckv), rope(k_rope)] (B,T,1,r+rope), v' = ckv."""
+    r, rope = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = linear(p["w_dkv"], x)
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    c = rmsnorm(p["ckv_norm"], c, eps=cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_lat = jnp.concatenate([c[:, :, None, :], k_rope], axis=-1)
+    return k_lat, c[:, :, None, :]  # (B,T,1,r+rope), (B,T,1,r)
+
+
+def _mla_out(p, o, cfg: ModelConfig):
+    """o (B,T,H,r) -> absorb W_vb then W_o."""
+    B, T, H, r = o.shape
+    wvb = p["w_vb"]["w"].reshape(r, H, cfg.v_head_dim)
+    ov = jnp.einsum("bthr,rhv->bthv", o.astype(jnp.float32),
+                    wvb.astype(jnp.float32))
+    return linear(p["wo"], ov.reshape(B, T, -1).astype(o.dtype))
+
+
+def _mla_scale(cfg: ModelConfig) -> float:
+    return (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+
+def mla_masked(p, x, meta: SeqMeta, cfg: ModelConfig, *,
+               window: int | None, dup_len: int | None,
+               strict: bool = False
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = _mla_q_latent(p, x, meta.pos, cfg)
+    k, v = _mla_kv_latent(p, x, meta.pos, cfg)
+    o = kops.attention(
+        q, k, v, meta, meta,
+        impl=cfg.attn_impl,
+        scale=_mla_scale(cfg), softcap=None, window=window,
+        strict=strict, dup_len=dup_len, block_size=cfg.block_size)
+    return _mla_out(p, o, cfg), k, v
+
+
+def mla_decode(p, x, positions, cache: AttnCache, cfg: ModelConfig, *,
+               window: int | None, write_cache: bool,
+               cache_limit=None) -> tuple[jax.Array, AttnCache]:
+    q = _mla_q_latent(p, x, positions, cfg)
+    k_self, v_self = _mla_kv_latent(p, x, positions, cfg)
+    keys = jnp.concatenate([cache.k.astype(k_self.dtype), k_self], axis=1)
+    vals = jnp.concatenate([cache.v.astype(v_self.dtype), v_self], axis=1)
+    key_pos = jnp.concatenate([cache.pos, positions.astype(jnp.int32)], axis=1)
+    key_valid = _decode_key_mask(cache, positions, cache_limit)
+    o = _cache_decode_attention(
+        q, keys, vals, key_pos, key_valid, positions,
+        scale=_mla_scale(cfg), softcap=None, window=window)
+    new_cache = cache_write(cache, k_self, v_self, positions) \
+        if write_cache else cache
+    return _mla_out(p, o, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image layers / enc-dec memory)
+# ---------------------------------------------------------------------------
+
+
+def init_cross(key, cfg: ModelConfig, *, gated: bool) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_like(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": init_linear(ks["wq"], d, H * Dh, dtype=dt),
+        "wk": init_linear(ks["wk"], d, Hkv * Dh, dtype=dt),
+        "wv": init_linear(ks["wv"], d, Hkv * Dh, dtype=dt),
+        "wo": init_linear(ks["wo"], H * Dh, d, dtype=dt),
+    }
+    if gated:  # llama-3.2-vision tanh gates
+        p["gate"] = jnp.zeros((), dt)
+    return p
+
+
+def cross_attn(p, x, memory, cfg: ModelConfig,
+               memory_valid: jax.Array | None = None) -> jax.Array:
+    """x (B,T,d) queries attend to memory (B,Ne,d); no positional rotation
+    on memory keys (frontend embeddings carry their own positions)."""
+    B, T, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(B, T, H, Dh)
+    k = linear(p["wk"], memory).reshape(B, memory.shape[1], Hkv, Dh)
+    v = linear(p["wv"], memory).reshape(B, memory.shape[1], Hkv, Dh)
+    mask = None
+    if memory_valid is not None:
+        mask = jnp.broadcast_to(memory_valid[:, None, :],
+                                (B, T, memory.shape[1]))
+    o = mha_reference(q, k, v, mask, scale=Dh ** -0.5)
+    y = linear(p["wo"], o.reshape(B, T, -1))
+    if "gate" in p:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return y

@@ -1,0 +1,198 @@
+"""Unified model configuration covering every assigned architecture.
+
+A single ``ModelConfig`` describes dense / MoE / SSM / hybrid / enc-dec /
+VLM decoder stacks; ``layer_pattern`` derives the per-layer structure and
+the scan grouping (layers are stacked and scanned in repeating "pattern
+groups" so 56-72-layer configs lower with small HLO).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                    # attn | rwkv6 | mamba | cross_attn
+    window: int | None = None     # sliding window for this layer
+    ffn: str = "dense"            # dense | moe | rwkv_cm
+    cross: bool = False           # additional cross-attn sublayer (enc-dec)
+    d_ff: int = 0                 # 0 -> cfg.d_ff (prefix dense layers differ)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    arch_type: str = "dense"      # dense|moe|ssm|hybrid|encdec|vlm
+    source: str = ""              # citation for the assigned config
+
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    d_ff: int = 512
+    vocab_size: int = 512
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    embed_scale: bool = False     # gemma: x *= sqrt(d_model)
+    sandwich_norm: bool = False   # gemma2 post-norms
+
+    # attention
+    attn_kind: str = "gqa"        # gqa | mla
+    rope_theta: float = 10000.0
+    sliding_window: int = 0       # 0 -> disabled
+    local_global: bool = False    # gemma2: even layers local, odd global
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    query_scale: float = 0.0      # 0 -> 1/sqrt(head_dim)
+
+    # MLA (deepseek-v2)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 2
+    moe_d_ff: int = 0             # 0 -> d_ff
+    moe_every: int = 1
+    moe_offset: int = 0
+    first_k_dense: int = 0
+    dense_d_ff: int = 0           # for first_k_dense layers; 0 -> d_ff
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_groups: int = 1           # routing groups (align with data shards)
+
+    # SSM / hybrid
+    ssm_kind: str = ""            # rwkv6 | mamba
+    attn_every: int = 0           # hybrid: attn layer where i%attn_every==attn_offset
+    attn_offset: int = 4
+    d_state: int = 16
+    conv_width: int = 4
+    expand: int = 2
+    rwkv_head_dim: int = 64
+    lora_rank: int = 32           # rwkv6 data-dependence rank
+
+    # enc-dec / vlm (modality frontends are stubs; these describe the
+    # backbone that consumes precomputed frame/patch embeddings)
+    encoder_layers: int = 0
+    cross_attn_every: int = 0     # vlm: cross layer where i%every==cross_offset
+    cross_offset: int = 3
+    n_extra_tokens: int = 0       # audio frames / image patches
+    extra_embed_dim: int = 0      # frontend output dim (projector input)
+
+    # block diffusion (the paper's post-training wrapper)
+    block_size: int = 32
+    mask_token_id: int = -1       # -1 -> vocab_size - 1
+
+    # compute policy
+    dtype: str = "float32"
+    param_dtype: str = "float32"
+    attn_impl: str = "structured"  # ref | structured | pallas | pallas_interpret
+    remat: bool = False
+    remat_policy: str = "nothing"  # nothing | dots
+    scan_layers: bool = True
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def resolved_mask_token(self) -> int:
+        return self.mask_token_id if self.mask_token_id >= 0 else self.vocab_size - 1
+
+    @property
+    def resolved_moe_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def resolved_dense_d_ff(self) -> int:
+        return self.dense_d_ff or self.d_ff
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def layer_spec(self, i: int) -> LayerSpec:
+        if self.arch_type == "ssm":
+            mixer = self.ssm_kind
+        elif self.arch_type == "hybrid":
+            mixer = "attn" if (self.attn_every and
+                               i % self.attn_every == self.attn_offset) \
+                else self.ssm_kind
+        elif self.arch_type == "vlm":
+            mixer = "cross_attn" if (self.cross_attn_every and
+                                     i % self.cross_attn_every == self.cross_offset) \
+                else "attn"
+        else:
+            mixer = "attn"
+
+        window = None
+        if mixer == "attn":
+            if self.local_global:
+                window = self.sliding_window if i % 2 == 0 else None
+            elif self.sliding_window:
+                window = self.sliding_window
+
+        if i < self.first_k_dense:
+            ffn = "dense"
+        elif self.n_experts and (i % self.moe_every == self.moe_offset):
+            ffn = "moe"
+        elif self.ssm_kind == "rwkv6" and self.arch_type == "ssm":
+            ffn = "rwkv_cm"
+        else:
+            ffn = "dense"
+
+        cross = (self.arch_type == "encdec")
+        d_ff = self.resolved_dense_d_ff if (i < self.first_k_dense) else 0
+        return LayerSpec(mixer=mixer, window=window, ffn=ffn, cross=cross,
+                         d_ff=d_ff)
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def layer_pattern(cfg: ModelConfig
+                  ) -> tuple[list[LayerSpec], list[LayerSpec], int]:
+    """Returns (prefix_specs, group_specs, n_groups).
+
+    prefix = ``first_k_dense`` unscanned layers; the rest is ``n_groups``
+    repeats of the ``group_specs`` pattern (identical structure and param
+    shapes in every repeat — scannable).
+    """
+    prefix = [cfg.layer_spec(i) for i in range(cfg.first_k_dense)]
+    rest = cfg.n_layers - cfg.first_k_dense
+
+    period = 1
+    if cfg.local_global:
+        period = _lcm(period, 2)
+    if cfg.arch_type == "hybrid" and cfg.attn_every:
+        period = _lcm(period, cfg.attn_every)
+    if cfg.arch_type == "vlm" and cfg.cross_attn_every:
+        period = _lcm(period, cfg.cross_attn_every)
+    if cfg.n_experts and cfg.moe_every > 1:
+        period = _lcm(period, cfg.moe_every)
+    if not cfg.scan_layers:
+        period = rest
+    assert rest % max(period, 1) == 0, \
+        f"{cfg.name}: {rest} layers not divisible by pattern period {period}"
+
+    group = [cfg.layer_spec(cfg.first_k_dense + j) for j in range(period)]
+    # verify periodicity holds across the whole stack
+    for i in range(rest):
+        assert cfg.layer_spec(cfg.first_k_dense + i) == group[i % period], \
+            f"{cfg.name}: layer {i} breaks the pattern period {period}"
+    return prefix, group, rest // period

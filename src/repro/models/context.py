@@ -1,0 +1,48 @@
+"""Execution context threaded through every layer.
+
+One ``LayerCtx`` describes which of the three execution modes a forward
+pass is in and carries the mode's inputs (mask metadata, caches, memory).
+
+modes:
+  ``dup``    — duplicated-sequence masked pass (SFT / DiPO logits);
+  ``plain``  — committed block-causal pass (prefill; fills caches);
+  ``decode`` — current-block denoise step against caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.masks import SeqMeta
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LayerCtx:
+    mode: str = dataclasses.field(metadata={"static": True})
+    # masked modes
+    meta: SeqMeta | None = None
+    dup_len: int | None = dataclasses.field(
+        default=None, metadata={"static": True})
+    strict: bool = dataclasses.field(
+        default=False, metadata={"static": True})
+    n_blocks: int | None = dataclasses.field(
+        default=None, metadata={"static": True})
+    # decode mode
+    positions: jax.Array | None = None     # (B, n) absolute positions
+    cache_limit: jax.Array | None = None   # scalar/(B,): cache pos < limit
+    write_cache: bool = dataclasses.field(
+        default=False, metadata={"static": True})
+    # cross attention
+    memory: jax.Array | None = None        # (B, Ne, d_model)
+    memory_valid: jax.Array | None = None
+    # whether plain mode should also emit per-block boundary states (replay)
+    want_boundaries: bool = dataclasses.field(
+        default=False, metadata={"static": True})
+
+    @property
+    def pos(self) -> jax.Array:
+        return self.meta.pos if self.meta is not None else self.positions

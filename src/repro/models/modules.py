@@ -1,0 +1,224 @@
+"""Minimal pure-JAX module substrate.
+
+No flax/haiku available in this container, so the framework carries its own
+functional module layer: parameters are nested dicts of jnp arrays, every
+module is an (init, apply) pair of plain functions, and layer stacks are
+jax.lax.scan-compatible (params stacked along a leading axis).
+
+Conventions
+-----------
+* ``init_*`` functions take a PRNGKey first and return a param pytree.
+* ``apply`` style functions take the param pytree first.
+* dtype policy: ``param_dtype`` is the storage dtype, ``dtype`` the compute
+  dtype; casts happen at module boundaries (MaxText-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# RNG helpers
+# ---------------------------------------------------------------------------
+
+
+def split_like(key: jax.Array, names: Sequence[str]) -> dict[str, jax.Array]:
+    """Split ``key`` into one sub-key per name (order-stable)."""
+    keys = jax.random.split(key, len(names))
+    return {n: k for n, k in zip(names, keys)}
+
+
+def fold_name(key: jax.Array, name: str) -> jax.Array:
+    """Deterministically derive a sub-key from a string name."""
+    h = hash(name) % (2**31 - 1)
+    return jax.random.fold_in(key, h)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def lecun_init(key, shape, fan_in: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return normal_init(key, shape, scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, *, dtype=jnp.float32,
+                use_bias: bool = False, scale: float | None = None) -> Params:
+    p = {"w": lecun_init(key, (d_in, d_out), d_in, dtype)
+         if scale is None else normal_init(key, (d_in, d_out), scale, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array, *, dtype=None) -> jax.Array:
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d_model: int, *, dtype=jnp.float32) -> Params:
+    return {"table": normal_init(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed(p: Params, ids: jax.Array, *, dtype=None) -> jax.Array:
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def unembed(p: Params, x: jax.Array, *, dtype=None) -> jax.Array:
+    """Tied unembedding: logits = x @ table.T (cast to f32 for stability)."""
+    t = p["table"].astype(jnp.float32 if dtype is None else dtype)
+    return x.astype(t.dtype) @ t.T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs (split-half convention).
+
+    x: (..., L, H, D); positions: broadcastable to (..., L) int32.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, d/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., L, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+    "relu": jax.nn.relu,
+    "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+
+
+def tree_size(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    """Flatten to [('a/b/c', leaf), ...] path strings."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p).strip("."))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def stack_trees(trees: Sequence[PyTree]) -> PyTree:
+    """Stack a list of identical pytrees along a new leading axis (for scan)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def count_params_by_prefix(params: PyTree) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for path, leaf in tree_paths(params):
+        head = path.split("/", 1)[0]
+        out[head] = out.get(head, 0) + leaf.size
+    return out

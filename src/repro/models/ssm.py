@@ -1,0 +1,291 @@
+"""Recurrent mixers: RWKV6 (Finch, data-dependent decay) and Mamba.
+
+Block-diffusion semantics for recurrent layers (DESIGN.md §4): the
+intra-block denoiser is causal, so
+
+* the *clean* stream runs the ordinary causal recurrence, collecting the
+  state at every diffusion-block boundary;
+* each *noisy* block re-runs the recurrence from its boundary state
+  (vmapped over blocks — exact and parallel).
+
+Projections (r/k/v/w/g, Δ/B/C, convs) are computed for the whole sequence
+in parallel outside the scan; only the cheap state recurrences are
+sequential.  States are float32 regardless of compute dtype.
+
+State pytrees:
+  RWKV6: {"wkv": (B,H,Dk,Dv) f32, "shift": (B,d), "cm_shift": (B,d)}
+  Mamba: {"ssm": (B,di,ds) f32, "conv": (B,W-1,di)}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .modules import init_linear, linear, split_like
+
+
+# ---------------------------------------------------------------------------
+# generic block-boundary scan helper
+# ---------------------------------------------------------------------------
+
+
+def scan_with_boundaries(step_scan, state0, xs, n_blocks: int | None):
+    """Run ``step_scan(state, xs_block) -> (ys_block, state)`` over the whole
+    sequence.  If n_blocks is given, xs are split into that many equal
+    time-blocks and the state at the *entry* of each block is emitted.
+
+    xs: pytree with leading (B, T, ...) axes.  Returns (ys, final_state,
+    boundary_states | None) where boundary_states has leading (K, ...).
+    """
+    if n_blocks is None:
+        ys, state = step_scan(state0, xs)
+        return ys, state, None
+    T = jax.tree_util.tree_leaves(xs)[0].shape[1]
+    K = n_blocks
+    bsz = T // K
+    xb = jax.tree.map(
+        lambda a: a.reshape(a.shape[0], K, bsz, *a.shape[2:]).swapaxes(0, 1),
+        xs)
+
+    def outer(state, xk):
+        ys, new_state = step_scan(state, xk)
+        return new_state, (ys, state)
+
+    final, (ys, bounds) = jax.lax.scan(outer, state0, xb)
+    ys = jax.tree.map(
+        lambda a: a.swapaxes(0, 1).reshape(a.shape[1], T, *a.shape[3:]), ys)
+    return ys, final, bounds
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_zero_state(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.d_model // cfg.rwkv_head_dim
+    dh = cfg.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "shift": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def init_rwkv6(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    r = cfg.lora_rank
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_like(key, ["lora1", "lora2", "wlora1", "wlora2",
+                          "wr", "wk", "wv", "wg", "wo"])
+    targets = 5  # r, k, v, w, g token-shift deltas
+    return {
+        "mu_base": jnp.full((d,), 0.5, dt),
+        "mu": jnp.full((targets, d), 0.5, dt),
+        "lora_w1": init_linear(ks["lora1"], d, targets * r, dtype=dt),
+        "lora_w2": (jax.random.normal(ks["lora2"], (targets, r, d),
+                                      jnp.float32) * 0.01).astype(dt),
+        "w0": jnp.full((d,), -6.0, dt),  # decay bias: exp(-exp(-6)) ~ slow
+        "w_lora1": init_linear(ks["wlora1"], d, 64, dtype=dt),
+        "w_lora2": init_linear(ks["wlora2"], 64, d, dtype=dt, scale=0.01),
+        "u": jnp.zeros((H, dh), dt),     # per-channel bonus
+        "wr": init_linear(ks["wr"], d, d, dtype=dt),
+        "wk": init_linear(ks["wk"], d, d, dtype=dt),
+        "wv": init_linear(ks["wv"], d, d, dtype=dt),
+        "wg": init_linear(ks["wg"], d, d, dtype=dt),
+        "wo": init_linear(ks["wo"], d, d, dtype=dt),
+        "ln_scale": jnp.ones((H, dh), dt),
+        "ln_bias": jnp.zeros((H, dh), dt),
+    }
+
+
+def _rwkv6_projections(p, x, shift_in, cfg: ModelConfig):
+    """Data-dependent token shift + projections, fully parallel over T.
+
+    x (B,T,d); shift_in (B,d).  Returns (r,k,v,w,g) each (B,T,H,dh) and the
+    new shift state (B,d).
+    """
+    B, T, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    rank = cfg.lora_rank
+    shifted = jnp.concatenate([shift_in[:, None, :].astype(x.dtype),
+                               x[:, :-1, :]], axis=1)
+    xx = shifted - x
+    mix_base = x + xx * p["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(linear(p["lora_w1"], mix_base))             # (B,T,5r)
+    lora = lora.reshape(B, T, 5, rank)
+    delta = jnp.einsum("btcr,crd->btcd", lora.astype(jnp.float32),
+                       p["lora_w2"].astype(jnp.float32)).astype(x.dtype)
+    mu = p["mu"].astype(x.dtype)                                # (5, d)
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (mu + delta)  # (B,T,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = linear(p["wr"], xr).reshape(B, T, H, dh)
+    k = linear(p["wk"], xk).reshape(B, T, H, dh)
+    v = linear(p["wv"], xv).reshape(B, T, H, dh)
+    g = linear(p["wg"], xg).reshape(B, T, H, dh)
+    # data-dependent decay (the Finch headline feature)
+    w_log = p["w0"].astype(jnp.float32) + linear(
+        p["w_lora2"], jnp.tanh(linear(p["w_lora1"], xw))).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, T, H, dh)           # in (0,1)
+    return r, k, v, w, g, x[:, -1, :].astype(jnp.float32)
+
+
+def _wkv_scan(state0, r, k, v, w, u):
+    """Linear recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T).   All f32 internally."""
+    rf, kf, vf, wf = (a.astype(jnp.float32).swapaxes(0, 1)
+                      for a in (r, k, v, w))  # (T,B,H,dh)
+
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw
+        kv = kt[..., :, None] * vt[..., None, :]                # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None] [..., :, None] * kv)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, y
+
+    S, ys = jax.lax.scan(step, state0, (rf, kf, vf, wf))
+    return ys.swapaxes(0, 1), S                                 # (B,T,H,dh)
+
+
+def rwkv6_forward(p, x, state: dict, cfg: ModelConfig, *,
+                  n_blocks: int | None = None):
+    """Causal RWKV6 time-mix over x (B,T,d) from ``state``.
+
+    Returns (y (B,T,d), new_state, boundary_states|None).  boundary_states
+    (K-leading pytree of {"wkv","shift"}) are the states at each diffusion
+    block entry, consumed by the noisy-block re-runs.
+    """
+    B, T, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    r, k, v, w, g, last_x = _rwkv6_projections(p, x, state["shift"], cfg)
+    u = p["u"].astype(jnp.float32)
+
+    def step_scan(S, xs_blk):
+        rb, kb, vb, wb = xs_blk
+        y, S_new = _wkv_scan(S, rb, kb, vb, wb, u)
+        return y, S_new
+
+    ys, S_final, wkv_bounds = scan_with_boundaries(
+        step_scan, state["wkv"].astype(jnp.float32), (r, k, v, w), n_blocks)
+
+    # per-head group norm
+    yf = ys.astype(jnp.float32)
+    mu_ = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mu_) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+    y = (yn * jax.nn.silu(g.astype(jnp.float32))).reshape(B, T, d)
+    out = linear(p["wo"], y.astype(x.dtype))
+
+    new_state = {"wkv": S_final, "shift": last_x}
+    bounds = None
+    if n_blocks is not None:
+        # shift state at each block entry = last clean token of prev block
+        bsz = T // n_blocks
+        ends = jnp.concatenate(
+            [state["shift"][:, None, :],
+             x[:, bsz - 1:T - 1:bsz, :].astype(jnp.float32)], axis=1)
+        bounds = {"wkv": wkv_bounds,                       # (K,B,H,dh,dh)
+                  "shift": ends.swapaxes(0, 1)}            # (K,B,d)
+    return out, new_state, bounds
+
+
+# ---------------------------------------------------------------------------
+# Mamba (jamba's recurrent mixer)
+# ---------------------------------------------------------------------------
+
+
+def mamba_zero_state(cfg: ModelConfig, batch: int) -> dict:
+    di = cfg.d_inner
+    return {
+        "ssm": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32),
+    }
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, di, ds, W = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.conv_width
+    dt_rank = max(16, d // 16)
+    dtp = jnp.dtype(cfg.param_dtype)
+    ks = split_like(key, ["in", "conv", "xdt", "dt", "B", "C", "out"])
+    return {
+        "in_proj": init_linear(ks["in"], d, 2 * di, dtype=dtp),
+        "conv_w": (jax.random.normal(ks["conv"], (W, di), jnp.float32)
+                   * (W ** -0.5)).astype(dtp),
+        "conv_b": jnp.zeros((di,), dtp),
+        "w_xdt": init_linear(ks["xdt"], di, dt_rank, dtype=dtp),
+        "w_dt": init_linear(ks["dt"], dt_rank, di, dtype=dtp),
+        "dt_bias": jnp.full((di,), -4.6, dtp),  # softplus^-1(0.01)
+        "w_B": init_linear(ks["B"], di, ds, dtype=dtp),
+        "w_C": init_linear(ks["C"], di, ds, dtype=dtp),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(dtp),
+        "D": jnp.ones((di,), dtp),
+        "out_proj": init_linear(ks["out"], di, d, dtype=dtp),
+    }
+
+
+def mamba_forward(p, x, state: dict, cfg: ModelConfig, *,
+                  n_blocks: int | None = None):
+    """Causal Mamba over x (B,T,d) from state; same contract as rwkv6."""
+    B, T, d = x.shape
+    di, ds, W = cfg.d_inner, cfg.d_state, cfg.conv_width
+    xz = linear(p["in_proj"], x)
+    xb, z = jnp.split(xz, 2, axis=-1)                           # (B,T,di)
+
+    # depthwise causal conv with carried tail
+    xpad = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)
+    conv_in = xpad.transpose(0, 2, 1)                            # (B,di,T+W-1)
+    kern = p["conv_w"].astype(xb.dtype).T[:, None, :]            # (di,1,W)
+    xc = jax.lax.conv_general_dilated(
+        conv_in, kern, window_strides=(1,), padding="VALID",
+        feature_group_count=di)                                  # (B,di,T)
+    xc = jax.nn.silu(xc.transpose(0, 2, 1) + p["conv_b"].astype(xb.dtype))
+
+    dt = jax.nn.softplus(
+        linear(p["w_dt"], linear(p["w_xdt"], xc)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                      # (B,T,di)
+    Bc = linear(p["w_B"], xc).astype(jnp.float32)                # (B,T,ds)
+    Cc = linear(p["w_C"], xc).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (di,ds)
+    xcf = xc.astype(jnp.float32)
+
+    def step_scan(h, xs_blk):
+        dtb, Bb, Cb, xcb = (a.swapaxes(0, 1) for a in xs_blk)    # (t,B,...)
+
+        def step(hs, inp):
+            dt_t, B_t, C_t, x_t = inp
+            dA = jnp.exp(dt_t[..., None] * A[None])              # (B,di,ds)
+            dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]
+            h_new = dA * hs + dBx
+            y = jnp.einsum("bds,bs->bd", h_new, C_t)
+            return h_new, y
+
+        h_new, ys = jax.lax.scan(step, h, (dtb, Bb, Cb, xcb))
+        return ys.swapaxes(0, 1), h_new
+
+    ys, h_final, ssm_bounds = scan_with_boundaries(
+        step_scan, state["ssm"], (dt, Bc, Cc, xcf), n_blocks)
+
+    y = ys + xcf * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = linear(p["out_proj"], y)
+
+    new_state = {"ssm": h_final,
+                 "conv": xpad[:, T:, :].astype(jnp.float32)}
+    bounds = None
+    if n_blocks is not None:
+        bsz = T // n_blocks
+        # conv tail entering each block: last W-1 xb values before it
+        tails = [xpad[:, k * bsz:k * bsz + W - 1, :].astype(jnp.float32)
+                 for k in range(n_blocks)]
+        bounds = {"ssm": ssm_bounds,                            # (K,B,di,ds)
+                  "conv": jnp.stack(tails, axis=0)}             # (K,B,W-1,di)
+    return out, new_state, bounds

@@ -1,0 +1,79 @@
+"""AdamW with global-norm clipping and shardable state.
+
+Optimizer state mirrors the parameter pytree (m, v per leaf) so the
+distributed layer can shard it with the identical PartitionSpecs (the
+ZeRO-1 equivalent of the paper's DeepSpeed setup).  ``state_dtype``
+selects f32 (default) or bf16 moments — the bf16 option is what lets the
+398B jamba config fit a single v5e pod (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    # schedule: None -> constant lr
+    schedule: Callable[[jax.Array], jax.Array] | None = None
+
+
+def init_state(cfg: AdamWConfig, params: PyTree) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, params: PyTree, grads: PyTree,
+                  state: dict) -> tuple[PyTree, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.ones(())
+    lr = cfg.schedule(count) if cfg.schedule is not None else cfg.lr
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        step = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,23 @@
+"""LR schedules (the paper uses cosine annealing with warmup for SFT)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(max_lr: float, total_steps: int, *,
+                    warmup_steps: int = 0, min_lr: float = 0.0):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = max_lr * c / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((c - warmup_steps) /
+                     jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_lr + 0.5 * (max_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return fn
+
+
+def constant_schedule(lr: float):
+    def fn(count):
+        return jnp.full((), lr, jnp.float32)
+    return fn

@@ -1,0 +1,28 @@
+"""Verifiable rewards (the math-verify role)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.math_tasks import check_answer, parse_answer
+from repro.data.tokenizer import ByteTokenizer
+
+
+def math_rewards(tokenizer: ByteTokenizer, gen: dict,
+                 answers: np.ndarray, block_size: int) -> np.ndarray:
+    """1.0 for an exactly-correct '#### <answer>', small shaping for a
+    parseable answer, 0 otherwise."""
+    tokens = np.asarray(gen["tokens"])
+    pb = np.asarray(gen["prompt_blocks"])
+    gb = np.asarray(gen["gen_blocks"])
+    B = tokens.shape[0]
+    r = np.zeros((B,), np.float32)
+    for i in range(B):
+        start = int(pb[i]) * block_size
+        end = start + int(gb[i]) * block_size
+        text = tokenizer.decode(tokens[i, start:end])
+        if check_answer(text, int(answers[i])):
+            r[i] = 1.0
+        elif parse_answer(text) is not None:
+            r[i] = 0.1
+    return r

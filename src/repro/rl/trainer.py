@@ -1,0 +1,139 @@
+"""DiPO RL trainer — the paper's Fig. 5b online loop.
+
+Per step: pull fresh prompts -> rollout G trajectories per prompt through
+the RolloutEngine (reading the live server weights) -> verifiable rewards
+-> trajectory-exact log-probs -> DiPO update -> push params in place into
+the server.  The per-phase wall-clock breakdown is recorded, which is what
+benchmarks/fig6 compares against the offline-checkpoint baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decoding
+from repro.core.dipo import dipo_loss
+from repro.core.trajectory import trajectory_logprobs
+from repro.optim import adamw
+from repro.rl.rewards import math_rewards
+from repro.serving.engine import RolloutEngine
+
+
+@dataclasses.dataclass
+class DiPOConfig:
+    group_size: int = 8          # G rollouts per prompt
+    eps: float = 0.2
+    beta: float = 0.0            # KL-to-reference coefficient
+    aggregate: str = "token"     # Eq.8 (DAPO) | "seq" (Eq.6)
+    normalize_std: bool = False
+    logprob_scheme: str = "auto"  # packed | replay | fused_approx
+
+
+class DiPOTrainer:
+    def __init__(self, model, engine: RolloutEngine,
+                 opt_cfg: adamw.AdamWConfig, rl_cfg: DiPOConfig, params):
+        self.model = model
+        self.engine = engine
+        self.rl_cfg = rl_cfg
+        self.opt_cfg = opt_cfg
+        self.params = params
+        self.opt_state = adamw.init_state(opt_cfg, params)
+        # real copy: the train step donates its params buffers, and the
+        # reference policy must survive every update
+        self.ref_params = jax.tree.map(jnp.copy, params) \
+            if rl_cfg.beta else None
+        self.timings: list[dict] = []
+        s_max = engine.gen_cfg.s_max
+
+        def step_fn(params, opt_state, roll, ref_logp, n_groups):
+            def loss_fn(p):
+                logp = trajectory_logprobs(
+                    model, p, roll, s_max=s_max,
+                    scheme=rl_cfg.logprob_scheme)
+                return dipo_loss(
+                    logp, roll, ref_logp=ref_logp, n_groups=n_groups,
+                    eps=rl_cfg.eps, beta=rl_cfg.beta,
+                    aggregate=rl_cfg.aggregate,
+                    normalize_std=rl_cfg.normalize_std)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt_state, om = adamw.apply_updates(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, {**metrics, **om, "loss": loss}
+
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1),
+                             static_argnames=("n_groups",))
+        self._ref_logp = jax.jit(functools.partial(
+            trajectory_logprobs, model, s_max=s_max,
+            scheme=rl_cfg.logprob_scheme))
+
+    def train_step(self, prompt_batch, rng) -> dict:
+        cfg = self.rl_cfg
+        bsz = self.model.cfg.block_size
+        P = prompt_batch.prompt_tokens.shape[0]
+        G = cfg.group_size
+
+        # ---- rollout (G per prompt) ----------------------------------
+        t0 = time.perf_counter()
+        toks = np.repeat(prompt_batch.prompt_tokens, G, axis=0)
+        blocks = np.repeat(prompt_batch.prompt_blocks, G, axis=0)
+        answers = np.repeat(prompt_batch.answers, G, axis=0)
+        rng, kr = jax.random.split(rng)
+        gen = self.engine.generate_ids(toks, blocks, kr)
+        t_roll = time.perf_counter() - t0
+
+        # ---- rewards ---------------------------------------------------
+        t0 = time.perf_counter()
+        rewards = math_rewards(self.engine.tok, gen, answers, bsz)
+        group = np.repeat(np.arange(P, dtype=np.int32), G)
+        roll = decoding.rollout_to_batch(
+            gen, jnp.asarray(rewards), jnp.asarray(group), bsz)
+        t_reward = time.perf_counter() - t0
+
+        # ---- logits + policy update -----------------------------------
+        t0 = time.perf_counter()
+        ref_logp = None
+        if self.ref_params is not None:
+            ref_logp = jax.lax.stop_gradient(
+                self._ref_logp(self.ref_params, roll))
+        self.params, self.opt_state, metrics = self._step(
+            self.params, self.opt_state, roll, ref_logp, P)
+        jax.block_until_ready(metrics["loss"])
+        t_train = time.perf_counter() - t0
+
+        # ---- in-place server update ------------------------------------
+        t0 = time.perf_counter()
+        self.engine.store.update_weights(self.params)
+        # offline stores pay the reload on the *next* rollout; in-place
+        # stores are done here.
+        t_update = time.perf_counter() - t0
+
+        timing = {"rollout_s": t_roll, "reward_s": t_reward,
+                  "train_s": t_train, "update_s": t_update}
+        self.timings.append(timing)
+        out = {k: float(v) for k, v in metrics.items()}
+        out.update(timing)
+        out["reward_mean"] = float(np.mean(rewards))
+        out["acc"] = float(np.mean(rewards >= 1.0))
+        return out
+
+    def run(self, prompt_batches, steps: int, rng, *, log_every: int = 1,
+            verbose: bool = True) -> list[dict]:
+        history = []
+        for i in range(steps):
+            rng, k = jax.random.split(rng)
+            m = self.train_step(next(prompt_batches), k)
+            history.append(m)
+            if verbose and (i % log_every == 0 or i == steps - 1):
+                print(f"[dipo {i:3d}] loss={m['loss']:.4f} "
+                      f"acc={m['acc']:.3f} reward={m['reward_mean']:.3f} "
+                      f"clip={m['clip_frac']:.3f} "
+                      f"(roll {m['rollout_s']:.2f}s train {m['train_s']:.2f}s "
+                      f"update {m['update_s']:.3f}s)")
+        return history

@@ -1,0 +1,84 @@
+"""Model server with in-place weight updates (paper §4.2, Fig. 5b).
+
+The LMDeploy analogue: the rollout engine holds one live copy of the
+(sharded) parameters; each RL step pushes the trainer's fresh params into
+the server **in place** — a device-to-device donation, no file-system IO,
+the server never reloads.  ``OfflineWeightStore`` is the Fig. 5a baseline
+it replaces: every step saves a checkpoint and the "server" re-loads it
+(twice, as the paper observes: once for rollout, once for training).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Any
+
+import jax
+
+from repro.checkpoint.io import load_pytree, save_pytree
+
+
+class ModelServer:
+    """Keeps the live param pytree + a monotonically increasing version."""
+
+    def __init__(self, params: Any, *, donate: bool = True):
+        self._params = params
+        self.version = 0
+        self.donate = donate
+        self.update_seconds = 0.0
+
+    @property
+    def params(self):
+        return self._params
+
+    def update_weights(self, new_params) -> int:
+        """In-place push (the LMDeploy update API analogue).
+
+        With donation the old buffers are released as the new ones land;
+        there is no serialisation and no reload.
+        """
+        t0 = time.perf_counter()
+        if self.donate:
+            old = self._params
+            self._params = new_params
+            del old
+        else:
+            self._params = jax.tree.map(lambda x: x, new_params)
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(self._params)[0])
+        self.update_seconds = time.perf_counter() - t0
+        self.version += 1
+        return self.version
+
+
+class OfflineWeightStore:
+    """Fig. 5a baseline: checkpoint round-trip through the file system."""
+
+    def __init__(self, params: Any, root: str | None = None):
+        self.root = root or tempfile.mkdtemp(prefix="dirl_offline_")
+        self.version = 0
+        self._like = jax.tree.map(lambda x: x, params)
+        self.save_seconds = 0.0
+        self.load_seconds = 0.0
+        self.update_weights(params)
+
+    def _path(self, version: int) -> str:
+        return os.path.join(self.root, f"ckpt_{version}.msgpack")
+
+    def update_weights(self, new_params) -> int:
+        t0 = time.perf_counter()
+        self.version += 1
+        save_pytree(self._path(self.version), new_params)
+        self.save_seconds = time.perf_counter() - t0
+        return self.version
+
+    @property
+    def params(self):
+        """Every access loads from storage — the cost Fig. 6 eliminates."""
+        t0 = time.perf_counter()
+        p = load_pytree(self._path(self.version), self._like)
+        jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+        self.load_seconds = time.perf_counter() - t0
+        return p

@@ -1,0 +1,12 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device; only
+repro.launch.dryrun sets up the 512 placeholder devices (in its own
+process)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,52 @@
+"""HLO analysis utilities (roofline substrate)."""
+
+import pytest
+
+from repro.launch import hlo_analysis as hlo
+
+SAMPLE_HLO = """
+  %ag = bf16[8,128,256]{2,1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={1}
+  %ar = f32[1024,1024]{1,0} all-reduce(%y), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %ars = f32[64,64]{1,0} all-reduce-start(%z), replica_groups={{0,1}}
+  %ard = f32[64,64]{1,0} all-reduce-done(%ars)
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tup = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%a, %b), replica_groups=[4,2]
+"""
+
+
+def test_collective_stats_parsing():
+    st = hlo.collective_stats(SAMPLE_HLO)
+    per = st["per_op"]
+    assert per["all-gather"]["count"] == 1
+    assert per["all-reduce"]["count"] == 2        # -start counted, -done not
+    assert per["collective-permute"]["count"] == 1
+    assert per["all-to-all"]["count"] == 1
+    # all-gather: 8*128*256*2 bytes * (4-1)/4
+    assert per["all-gather"]["bytes"] == int(8 * 128 * 256 * 2 * 3 / 4)
+    # all-reduce big: 1024^2*4 * 2 * 7/8
+    expect_ar = int(1024 * 1024 * 4 * 2 * 7 / 8) + int(64 * 64 * 4 * 2 / 2)
+    assert per["all-reduce"]["bytes"] == expect_ar
+    # tuple all-to-all sums both members, n=2 groups of size 2
+    assert per["all-to-all"]["bytes"] == int(2 * 16 * 16 * 4 * 1 / 2)
+    assert st["total_bytes"] == sum(v["bytes"] for v in per.values())
+
+
+def test_roofline_terms_and_dominance():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 * 2}
+    coll = {"total_bytes": 50e9 * 3}
+    t = hlo.roofline_terms(cost, coll, 256)
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(2.0)
+    assert t["t_collective_s"] == pytest.approx(3.0)
+    assert hlo.dominant_term(t) == "collective"
+
+
+def test_active_params_moe():
+    from repro import configs
+    cfg = configs.get_config("mixtral-8x22b")
+    total = 140_630_000_000
+    act = hlo.active_params(cfg, total)
+    # 8 experts top-2 -> roughly (2+overhead)/8 of expert params active
+    assert act < 0.45 * total
+    dense = configs.get_config("deepseek-7b")
+    assert hlo.active_params(dense, 123) == 123

@@ -1,0 +1,88 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each assigned architecture: instantiate the REDUCED same-family config
+(2-3 layers, d_model <= 512, <= 4 experts) and run one forward + one SFT
+train step on CPU, asserting output shapes and the absence of NaNs.
+Decode-capable archs additionally run one serve_step.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.core.block_diffusion import sft_loss
+from repro.core.masks import plain_layout
+from repro.models.model import BlockDiffLM
+
+ARCHS = configs.ASSIGNED_ARCHS + ["sdar-8b", "tiny"]
+
+
+def _extra_embeds(cfg, batch):
+    if not cfg.n_extra_tokens:
+        return None
+    return jax.random.normal(
+        jax.random.PRNGKey(9),
+        (batch, cfg.n_extra_tokens, cfg.extra_embed_dim), jnp.float32)
+
+
+def _batch(cfg, B=2, n_blocks=4):
+    L = cfg.block_size * n_blocks
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (B, L), 4, cfg.vocab_size - 2)
+    prompt_mask = jnp.arange(L)[None, :] < cfg.block_size
+    valid = jnp.ones((B, L), bool)
+    return {"tokens": tokens, "prompt_mask": prompt_mask, "valid": valid}, L
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    assert cfg.d_model <= 512 and cfg.n_layers <= 4
+    assert cfg.n_experts <= 4
+    model = BlockDiffLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch, L = _batch(cfg)
+    mem = _extra_embeds(cfg, 2)
+    if mem is not None:
+        batch["memory"] = model.compute_memory(params, mem)
+
+    def loss_fn(p):
+        return sft_loss(model, p, batch, jax.random.PRNGKey(1))
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gn = sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+    assert jnp.isfinite(gn), f"{arch}: non-finite grads"
+    assert float(metrics["masked_frac"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    model = BlockDiffLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, bsz = 2, cfg.block_size
+    L = bsz * 4
+    batch, _ = _batch(cfg)
+    mem = _extra_embeds(cfg, B)
+    memory = model.compute_memory(params, mem) if mem is not None else None
+
+    meta = plain_layout(batch["tokens"], batch["valid"],
+                        block_size=cfg.block_size)
+    caches = model.make_caches(B, L)
+    logits_p, out = model.forward_masked(params, batch["tokens"], meta,
+                                         caches=caches, memory=memory)
+    assert logits_p.shape == (B, L, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits_p).all())
+
+    blk = jnp.full((B, bsz), cfg.resolved_mask_token, jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(L, L + bsz, dtype=jnp.int32), (B, bsz))
+    # cache buffers sized L: decode the "next" block via ring semantics is
+    # out of range here, so decode block L-bsz instead (recompute last)
+    pos = pos - bsz
+    lg, _ = model.decode_step(params, blk, pos, out["caches"],
+                              cache_limit=jnp.full((B,), L - bsz),
+                              memory=memory)
+    assert lg.shape == (B, bsz, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all()), f"{arch}: non-finite decode logits"
