@@ -25,7 +25,7 @@ def main() -> None:
     quick = not args.full
 
     from . import (fig6_breakdown, fig7_sizes, fig8_tau_sweep,
-                   kernel_bench, table1_eval)
+                   kernel_bench, serve_bench, table1_eval)
 
     benches = {
         "kernel_bench": kernel_bench.run,
@@ -33,6 +33,7 @@ def main() -> None:
         "fig6_breakdown": fig6_breakdown.run,
         "table1_eval": table1_eval.run,
         "fig8_tau_sweep": fig8_tau_sweep.run,
+        "serve_bench": serve_bench.run,
     }
     for name, fn in benches.items():
         if args.only and args.only != name:

@@ -1,6 +1,6 @@
-"""Batched serving demo: the RolloutEngine answering a request batch with
-dynamic-threshold blockwise decoding + a live in-place weight update
-(the paper's Fig. 5b server loop, §4.2).
+"""Serving demo: the continuous-batching RolloutEngine answering a
+request batch, streaming completions in finish order, plus a live
+in-place weight update (the paper's Fig. 5b server loop, §4.2).
 
 PYTHONPATH=src python examples/serve.py [--ckpt path.msgpack]
 """
@@ -32,17 +32,21 @@ def main():
 
     server = ModelServer(params)
     engine = RolloutEngine(model, server, GenerationConfig(
-        max_len=96, s_max=4, mode="dynamic", tau=args.tau))
+        max_len=96, s_max=4, mode="dynamic", tau=args.tau,
+        batching="continuous", n_slots=2))
 
+    # streaming path: submit onto the live slot pool, harvest in finish
+    # order (a 2-slot pool serving 4 requests exercises admission)
     requests = ["Q: 12+7=?\nA:", "Q: 30-4=?\nA:", "Q: 5*6=?\nA:",
                 "Q: 9+9=?\nA:"]
-    outs = engine.generate_texts(requests, jax.random.PRNGKey(1))
-    for r, o in zip(requests, outs):
-        print(f"{r!r} -> {o!r}")
+    keys = jax.random.split(jax.random.PRNGKey(1), len(requests))
+    uids = {engine.submit(r, k): r for r, k in zip(requests, keys)}
+    for uid, text in engine.stream():
+        print(f"[done uid={uid}] {uids[uid]!r} -> {text!r}")
     s = engine.stats
     print(f"[engine] {s.rollouts} rollouts, {s.total_tokens} tokens, "
           f"{s.tokens_per_step:.2f} tokens/denoise-step, "
-          f"{s.wall_seconds:.2f}s")
+          f"slot-util {s.utilization:.0%}, {s.wall_seconds:.2f}s")
 
     # live in-place weight update, then serve again (server stays up)
     new_params = jax.tree.map(lambda x: x, engine.store.params)

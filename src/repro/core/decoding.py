@@ -1,15 +1,30 @@
 """Blockwise semi-autoregressive decoding (static & dynamic-threshold).
 
-The full generation loop is one jitted function: an outer fori over blocks
-(each sequence tracks its own block cursor, so ragged prompts decode in
-lock-step), an inner fori over denoise steps.  Every revealed token's step
-index is recorded — that step map is exactly what DiPO's unbiased logit
-computation consumes (trajectory.py).
+The generation loop is built from one reusable, jit-compatible primitive:
+``advance_block`` advances every sequence of a ``GenState`` by exactly one
+block — denoise (``denoise_block``), freeze finished rows, commit the
+block into the caches, and move the per-sequence cursors.  The one-shot
+``generate`` wraps it in a ``fori_loop``; the continuous-batching
+``serving.scheduler.SlotScheduler`` calls the same primitive once per
+scheduler tick with admissions in between.  Because every row of the
+state advances independently (per-row caches, per-row rng streams), the
+two drivers produce token-identical outputs and step maps for the same
+per-sequence rng keys — the property the RL trainer relies on for
+DiPO-exact rollouts.
+
+Every revealed token's step index is recorded — that step map is exactly
+what DiPO's unbiased logit computation consumes (trajectory.py).
 
 Dynamic decoding (paper §4.4/§5.1): at each denoise step, reveal every
 still-masked position whose top-1 probability exceeds tau (at least one —
 the best-confidence position — is always revealed).  Static decoding:
 reveal a fixed number of highest-confidence positions per step.
+
+RNG discipline: the state carries one rng key **per sequence** (shape
+(B, 2)); each denoise step splits every row's key independently, so a
+sequence's sample stream depends only on its own key — never on batch
+composition.  ``generate`` accepts either a single key (split across the
+batch) or a precomputed (B, 2) key array.
 """
 
 from __future__ import annotations
@@ -27,11 +42,21 @@ from .masks import plain_layout
 @dataclasses.dataclass
 class GenState:
     tokens: jax.Array      # (B, L_max)
-    steps: jax.Array       # (B, L_max)
+    steps: jax.Array       # (B, L_max) reveal-step map
     caches: dict
     blk: jax.Array         # (B,) next block index per sequence
     done: jax.Array        # (B,)
-    rng: jax.Array
+    rng: jax.Array         # (B, 2) per-sequence rng keys
+    limit: jax.Array       # (B,) exclusive block cursor cap per sequence
+    n_denoise: jax.Array   # (B,) cumulative denoise steps actually used
+
+
+def _per_seq_keys(rng, batch: int) -> jax.Array:
+    """Accept a single key or a (B, 2) batch of keys."""
+    rng = jnp.asarray(rng)
+    if rng.ndim == 2:
+        return rng
+    return jax.random.split(rng, batch)
 
 
 def _select_boundary(caches, bounds, prompt_blocks):
@@ -89,7 +114,18 @@ def denoise_block(model, params, caches, blk, rng, *,
                   mode: str, tau: float, n_steps: int,
                   temperature: float, s_max: int,
                   memory=None, memory_valid=None):
-    """Denoise one block for every sequence.  Returns (ids, step_map, rng)."""
+    """Denoise one block for every sequence.
+
+    ``rng`` is a (B, 2) batch of per-sequence keys; every row's stream is
+    split independently so sampling is invariant to batch composition.
+
+    Returns (ids, step_map, pos, rng, steps_used) where ``steps_used``
+    (B,) is the number of denoise steps that actually revealed tokens for
+    each sequence (``step_map.max() + 1``) — in dynamic-threshold mode
+    this is typically well below ``s_max`` and is what a production
+    early-exit loop would execute; the engine's throughput stats consume
+    it instead of assuming the worst-case budget.
+    """
     cfg = model.cfg
     bsz = cfg.block_size
     MASK = cfg.resolved_mask_token
@@ -107,9 +143,12 @@ def denoise_block(model, params, caches, blk, rng, *,
         lf = logits.astype(jnp.float32)
         # the [MASK] token is an input symbol, never an output
         lf = lf.at[..., MASK].set(-jnp.inf)
-        rng, kr = jax.random.split(rng)
+        ks = jax.vmap(jax.random.split)(rng)     # (B, 2, 2)
+        rng, kr = ks[:, 0], ks[:, 1]
         if temperature > 0:
-            cand = jax.random.categorical(kr, lf / temperature, axis=-1)
+            cand = jax.vmap(
+                lambda k, l: jax.random.categorical(k, l, axis=-1))(
+                    kr, lf / temperature)
         else:
             cand = jnp.argmax(lf, axis=-1)
         probs = jax.nn.softmax(lf, axis=-1)
@@ -137,7 +176,84 @@ def denoise_block(model, params, caches, blk, rng, *,
     steps0 = jnp.zeros((B, bsz), jnp.int32)
     ids, step_map, rng = jax.lax.fori_loop(0, s_max, body,
                                            (ids0, steps0, rng))
-    return ids, step_map, pos, rng
+    steps_used = step_map.max(axis=-1) + 1
+    return ids, step_map, pos, rng, steps_used
+
+
+def advance_block(model, params, st: GenState, *,
+                  mode: str, tau: float, n_steps: int,
+                  temperature: float, s_max: int, eos_id: int,
+                  memory=None, memory_valid=None) -> GenState:
+    """Advance every sequence of ``st`` by exactly one block (jittable).
+
+    The single-block step shared by the one-shot ``generate`` loop and
+    the continuous-batching scheduler: denoise the block at each row's
+    cursor, freeze rows already ``done`` (they re-commit their existing
+    block — idempotent, so inactive scheduler slots are harmless),
+    commit the block into the caches, scatter tokens/step-map, then
+    update cursors / done flags / actual-denoise-step counters.  A row
+    is done when its block hits EOS or its cursor reaches ``st.limit``.
+    """
+    bsz = model.cfg.block_size
+    B, L = st.tokens.shape
+    n_blocks_total = L // bsz
+    rows = jnp.arange(B)[:, None]
+
+    blk = jnp.minimum(st.blk, n_blocks_total - 1)
+    ids, step_map, pos, rng, steps_used = denoise_block(
+        model, params, st.caches, blk, st.rng, mode=mode, tau=tau,
+        n_steps=n_steps, temperature=temperature, s_max=s_max,
+        memory=memory, memory_valid=memory_valid)
+    # frozen sequences re-commit their existing block (idempotent)
+    old_ids = jnp.take_along_axis(st.tokens, pos, axis=1)
+    old_steps = jnp.take_along_axis(st.steps, pos, axis=1)
+    ids = jnp.where(st.done[:, None], old_ids, ids)
+    step_map = jnp.where(st.done[:, None], old_steps, step_map)
+
+    _, caches = model.decode_step(params, ids, pos, st.caches,
+                                  cache_limit=blk * bsz, write=True,
+                                  memory=memory,
+                                  memory_valid=memory_valid)
+    tokens = st.tokens.at[rows, pos].set(ids)
+    steps = st.steps.at[rows, pos].set(step_map)
+    hit_eos = (ids == eos_id).any(axis=-1)
+    done = st.done | hit_eos
+    new_blk = jnp.where(st.done, st.blk,
+                        jnp.minimum(st.blk + 1, st.limit))
+    done = done | (new_blk >= st.limit)
+    n_denoise = st.n_denoise + jnp.where(st.done, 0, steps_used)
+    return GenState(tokens=tokens, steps=steps, caches=caches,
+                    blk=new_blk, done=done, rng=rng, limit=st.limit,
+                    n_denoise=n_denoise)
+
+
+def init_state(model, params, prompt_tokens, prompt_blocks, rng, *,
+               max_len: int, limit=None,
+               memory=None, memory_valid=None) -> GenState:
+    """Prefill prompts and build the GenState ``advance_block`` consumes.
+
+    ``limit``: per-sequence exclusive block cap (defaults to the full
+    cache capacity ``max_len // block_size``).
+    """
+    cfg = model.cfg
+    bsz = cfg.block_size
+    B, Lp = prompt_tokens.shape
+    n_blocks_total = max_len // bsz
+    MASK = cfg.resolved_mask_token
+    caches = prefill(model, params, prompt_tokens, prompt_blocks, max_len,
+                     memory=memory, memory_valid=memory_valid)
+    tokens = jnp.concatenate(
+        [prompt_tokens,
+         jnp.full((B, max_len - Lp), MASK, prompt_tokens.dtype)], axis=1)
+    if limit is None:
+        limit = jnp.full((B,), n_blocks_total, jnp.int32)
+    return GenState(tokens=tokens.astype(jnp.int32),
+                    steps=jnp.zeros((B, max_len), jnp.int32),
+                    caches=caches, blk=prompt_blocks.astype(jnp.int32),
+                    done=jnp.zeros((B,), bool),
+                    rng=_per_seq_keys(rng, B),
+                    limit=jnp.asarray(limit, jnp.int32),
+                    n_denoise=jnp.zeros((B,), jnp.int32))
 
 
 def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
@@ -148,59 +264,29 @@ def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
     """Full blockwise generation (jit-compatible; all shapes static).
 
     Returns {"tokens" (B, L_max), "steps" (B, L_max), "gen_blocks" (B,),
-    "prompt_blocks" (B,), "done" (B,)} — everything RolloutBatch needs.
+    "prompt_blocks" (B,), "done" (B,), "denoise_steps" (B,)} — everything
+    RolloutBatch and the engine stats need.
     """
-    cfg = model.cfg
-    bsz = cfg.block_size
-    B, Lp = prompt_tokens.shape
-    n_blocks_total = max_len // bsz
-    max_new_blocks = n_blocks_total - Lp // bsz
-    MASK = cfg.resolved_mask_token
+    bsz = model.cfg.block_size
+    Lp = prompt_tokens.shape[1]
+    max_new_blocks = (max_len - Lp) // bsz
 
-    caches = prefill(model, params, prompt_tokens, prompt_blocks, max_len,
-                     memory=memory, memory_valid=memory_valid)
-    tokens = jnp.concatenate(
-        [prompt_tokens,
-         jnp.full((B, max_len - Lp), MASK, prompt_tokens.dtype)], axis=1)
-    st = GenState(tokens=tokens.astype(jnp.int32),
-                  steps=jnp.zeros((B, max_len), jnp.int32),
-                  caches=caches, blk=prompt_blocks.astype(jnp.int32),
-                  done=jnp.zeros((B,), bool), rng=rng)
-    rows = jnp.arange(B)[:, None]
-
-    def outer(_, st: GenState):
-        blk = jnp.minimum(st.blk, n_blocks_total - 1)
-        ids, step_map, pos, rng = denoise_block(
-            model, params, st.caches, blk, st.rng, mode=mode, tau=tau,
-            n_steps=n_steps, temperature=temperature, s_max=s_max,
-            memory=memory, memory_valid=memory_valid)
-        # frozen sequences re-commit their existing block (idempotent)
-        old_ids = jnp.take_along_axis(st.tokens, pos, axis=1)
-        old_steps = jnp.take_along_axis(st.steps, pos, axis=1)
-        ids = jnp.where(st.done[:, None], old_ids, ids)
-        step_map = jnp.where(st.done[:, None], old_steps, step_map)
-
-        _, caches = model.decode_step(params, ids, pos, st.caches,
-                                      cache_limit=blk * bsz, write=True,
-                                      memory=memory,
-                                      memory_valid=memory_valid)
-        tokens = st.tokens.at[rows, pos].set(ids)
-        steps = st.steps.at[rows, pos].set(step_map)
-        hit_eos = (ids == eos_id).any(axis=-1)
-        done = st.done | hit_eos
-        new_blk = jnp.where(st.done, st.blk,
-                            jnp.minimum(st.blk + 1, n_blocks_total))
-        done = done | (new_blk >= n_blocks_total)
-        return GenState(tokens=tokens, steps=steps, caches=caches,
-                        blk=new_blk, done=done, rng=rng)
-
-    st = jax.lax.fori_loop(0, max_new_blocks, outer, st)
+    st = init_state(model, params, prompt_tokens, prompt_blocks, rng,
+                    max_len=max_len, memory=memory,
+                    memory_valid=memory_valid)
+    step = functools.partial(advance_block, model, params, mode=mode,
+                             tau=tau, n_steps=n_steps,
+                             temperature=temperature, s_max=s_max,
+                             eos_id=eos_id, memory=memory,
+                             memory_valid=memory_valid)
+    st = jax.lax.fori_loop(0, max_new_blocks, lambda _, s: step(st=s), st)
     return {
         "tokens": st.tokens,
         "steps": st.steps,
         "gen_blocks": st.blk - prompt_blocks,
         "prompt_blocks": prompt_blocks,
         "done": st.done,
+        "denoise_steps": st.n_denoise,
     }
 
 

@@ -24,10 +24,13 @@ BATCH = "batch"  # symbolic: expands to the mesh's data-parallel axes
 
 def _current_mesh():
     # `with mesh:` (the dry-run / launcher idiom) sets the legacy thread
-    # resource, not the new abstract-mesh context; check both.
-    m = jax.sharding.get_abstract_mesh()
-    if m is not None and not m.empty:
-        return m
+    # resource, not the new abstract-mesh context; check both.  The
+    # abstract-mesh getter only exists on newer jax releases.
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        m = get_abstract()
+        if m is not None and not m.empty:
+            return m
     try:
         from jax._src.mesh import thread_resources
         pm = thread_resources.env.physical_mesh

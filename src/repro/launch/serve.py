@@ -19,6 +19,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--s-max", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batching", choices=["continuous", "static"],
+                    default="continuous")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-slot pool size (continuous batching)")
     args = ap.parse_args()
 
     import jax
@@ -42,7 +46,7 @@ def main():
     server = ModelServer(params)
     engine = RolloutEngine(model, server, GenerationConfig(
         max_len=args.max_len, s_max=args.s_max, mode="dynamic",
-        tau=args.tau))
+        tau=args.tau, batching=args.batching, n_slots=args.slots))
     rng = random.Random(0)
     prompts = [sample_problem(rng, level=0).prompt
                for _ in range(args.requests)]
@@ -50,9 +54,12 @@ def main():
     for p, o in zip(prompts, outs):
         print(f"{p!r} -> {o!r}")
     s = engine.stats
-    print(f"[engine] {s.rollouts} rollouts | {s.total_tokens} tokens | "
-          f"{s.tokens_per_step:.2f} tokens/denoise-step | "
-          f"{s.total_tokens / max(s.wall_seconds, 1e-9):.0f} tok/s")
+    line = (f"[engine] {s.rollouts} rollouts | {s.total_tokens} tokens | "
+            f"{s.tokens_per_step:.2f} tokens/denoise-step | "
+            f"{s.total_tokens / max(s.wall_seconds, 1e-9):.0f} tok/s")
+    if args.batching == "continuous":
+        line += f" | slot-util {s.utilization:.0%}"
+    print(line)
 
 
 if __name__ == "__main__":

@@ -116,6 +116,8 @@ class DiPOTrainer:
 
         timing = {"rollout_s": t_roll, "reward_s": t_reward,
                   "train_s": t_train, "update_s": t_update}
+        if self.engine.last_call.get("batching") == "continuous":
+            timing["rollout_util"] = self.engine.last_call["utilization"]
         self.timings.append(timing)
         out = {k: float(v) for k, v in metrics.items()}
         out.update(timing)

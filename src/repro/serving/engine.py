@@ -1,11 +1,28 @@
-"""RolloutEngine — batched blockwise-dLLM inference (the JetEngine role).
+"""RolloutEngine — continuous-batching blockwise-dLLM inference.
 
-Wraps the jitted ``core.decoding.generate`` loop with request batching,
-tokenisation, dynamic/static decoding policy, and the throughput counters
-the fig6/fig7 benchmarks read.  The engine reads weights from a
-``ModelServer`` (in-place updates) or ``OfflineWeightStore`` (checkpoint
-baseline) — swapping one for the other reproduces the paper's Fig. 6
-ablation without touching the engine.
+The JetEngine/LMDeploy role, rebuilt on ``serving.scheduler``: requests
+enter a queue, a fixed-slot ``SlotScheduler`` admits them into freed
+decode slots at block boundaries, and completions stream back in finish
+order.  The lock-step one-shot path (every request padded to the batch
+max and decoded to drain — the pre-refactor behaviour) is kept as
+``batching="static"`` for A/B benchmarking (benchmarks/serve_bench.py).
+
+Contracts kept:
+  * ``generate_ids(prompt_tokens, prompt_blocks, rng) -> gen dict`` —
+    row order == input order, token- and step-map-identical between the
+    static and continuous paths for the same rng (per-sequence key
+    streams; see core.decoding), so rl/trainer.py, launch/serve.py and
+    the fig6/fig7 benchmarks run unchanged.
+  * ``generate_texts`` — texts trimmed at the first EOS.
+  * ``EngineStats`` — throughput counters, now *honest*:
+    ``total_steps`` counts denoise steps actually executed (dynamic
+    early-exit included), not ``blocks * s_max``; continuous runs also
+    record slot utilization (active slot-ticks / paid slot-ticks).
+
+The engine reads weights from a ``ModelServer`` (in-place updates) or
+``OfflineWeightStore`` (checkpoint baseline) — swapping one for the
+other reproduces the paper's Fig. 6 ablation without touching the
+engine.
 """
 
 from __future__ import annotations
@@ -13,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Sequence
+from typing import Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +39,7 @@ import numpy as np
 from repro.core import decoding
 from repro.data.tokenizer import ByteTokenizer
 from repro.data.pipeline import pad_to_block
+from repro.serving.scheduler import Completion, SlotScheduler
 
 
 @dataclasses.dataclass
@@ -33,18 +51,27 @@ class GenerationConfig:
     n_steps: int = 8             # static: denoise steps per block
     temperature: float = 0.0
     eos_id: int = 1
+    batching: str = "continuous"  # continuous (slot pool) | static
+    n_slots: int = 8             # continuous: decode-slot pool size
 
 
 @dataclasses.dataclass
 class EngineStats:
     rollouts: int = 0
     total_tokens: int = 0
-    total_steps: int = 0          # denoise steps executed (blocks * s_max)
+    total_steps: int = 0          # denoise steps actually executed
     wall_seconds: float = 0.0
+    slot_ticks: int = 0           # continuous: paid slot-steps
+    active_slot_ticks: int = 0    # continuous: useful slot-steps
 
     @property
     def tokens_per_step(self) -> float:
         return self.total_tokens / max(self.total_steps, 1)
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of paid slot compute that advanced a live request."""
+        return self.active_slot_ticks / max(self.slot_ticks, 1)
 
 
 class RolloutEngine:
@@ -55,6 +82,9 @@ class RolloutEngine:
         self.gen_cfg = gen_cfg
         self.tok = tokenizer or ByteTokenizer()
         self.stats = EngineStats()
+        self.last_call: dict = {}
+        self._pending: list[Completion] = []   # stream() completions
+        # harvested while a generate_ids drain drove the shared pool
         self._gen_jit = jax.jit(
             functools.partial(
                 decoding.generate, model,
@@ -63,42 +93,178 @@ class RolloutEngine:
                 n_steps=gen_cfg.n_steps,
                 temperature=gen_cfg.temperature, eos_id=gen_cfg.eos_id),
             static_argnames=())
+        self._sched: SlotScheduler | None = None
+
+    @property
+    def scheduler(self) -> SlotScheduler:
+        """The persistent slot pool (created on first use)."""
+        if self._sched is None:
+            g = self.gen_cfg
+            self._sched = SlotScheduler(
+                self.model, n_slots=g.n_slots, max_len=g.max_len,
+                s_max=g.s_max, mode=g.mode, tau=g.tau, n_steps=g.n_steps,
+                temperature=g.temperature, eos_id=g.eos_id)
+        return self._sched
 
     # ------------------------------------------------------------------
     def generate_ids(self, prompt_tokens: np.ndarray,
                      prompt_blocks: np.ndarray, rng) -> dict:
-        """Run the jitted blockwise decode on pre-tokenised prompts."""
+        """Run blockwise decode on pre-tokenised prompts.
+
+        Row order of the returned dict matches the input; the static and
+        continuous paths are token-identical for the same ``rng``.
+        """
         t0 = time.perf_counter()
         params = self.store.params   # offline store pays a load here
-        gen = self._gen_jit(params, jnp.asarray(prompt_tokens),
-                            jnp.asarray(prompt_blocks), rng)
-        jax.block_until_ready(gen["tokens"])
+        if self.gen_cfg.batching == "static":
+            gen = self._gen_jit(params, jnp.asarray(prompt_tokens),
+                                jnp.asarray(prompt_blocks), rng)
+            jax.block_until_ready(gen["tokens"])
+            self.last_call = {"batching": "static"}
+        else:
+            gen = self._generate_ids_continuous(params, prompt_tokens,
+                                                prompt_blocks, rng)
         dt = time.perf_counter() - t0
         B = prompt_tokens.shape[0]
         bsz = self.model.cfg.block_size
-        new_tokens = int(jnp.sum(gen["gen_blocks"])) * bsz
         self.stats.rollouts += B
-        self.stats.total_tokens += new_tokens
-        self.stats.total_steps += int(jnp.sum(gen["gen_blocks"])) * \
-            self.gen_cfg.s_max
+        self.stats.total_tokens += int(jnp.sum(gen["gen_blocks"])) * bsz
+        self.stats.total_steps += int(jnp.sum(gen["denoise_steps"]))
         self.stats.wall_seconds += dt
         return gen
 
+    def _generate_ids_continuous(self, params, prompt_tokens,
+                                 prompt_blocks, rng) -> dict:
+        """Drain a fixed request batch through the slot pool."""
+        sched = self.scheduler
+        prompt_tokens = np.asarray(prompt_tokens)
+        prompt_blocks = np.asarray(prompt_blocks)
+        B, Lp = prompt_tokens.shape
+        bsz = self.model.cfg.block_size
+        max_len = self.gen_cfg.max_len
+        # match the static path's iteration budget (batch-wide): each
+        # request may generate at most (max_len - Lp_padded) blocks
+        max_new = (max_len - Lp) // bsz
+        keys = decoding._per_seq_keys(rng, B)
+        uid_to_row = {}
+        for i in range(B):
+            uid = sched.submit(prompt_tokens[i], int(prompt_blocks[i]),
+                               keys[i], max_new_blocks=max_new)
+            uid_to_row[uid] = i
+
+        tokens = np.zeros((B, max_len), np.int32)
+        steps = np.zeros((B, max_len), np.int32)
+        gen_blocks = np.zeros((B,), np.int32)
+        denoise = np.zeros((B,), np.int32)
+        done = np.zeros((B,), bool)
+        ticks0 = sched.stats.ticks
+        slot0, active0 = sched.stats.slot_ticks, \
+            sched.stats.active_slot_ticks
+        n_done = 0
+        while n_done < B:
+            for comp in sched.step(params):
+                row = uid_to_row.pop(comp.uid, None)
+                if row is None:
+                    # a streaming request finished mid-drain: hold it
+                    # for the next stream() pass
+                    self._pending.append(comp)
+                    continue
+                tokens[row] = comp.tokens
+                steps[row] = comp.steps
+                gen_blocks[row] = comp.gen_blocks
+                denoise[row] = comp.denoise_steps
+                # static parity: a zero-budget row (no loop trips) is
+                # never flagged done by the one-shot generate either
+                done[row] = comp.finished_eos or (
+                    comp.gen_blocks > 0
+                    and comp.prompt_blocks + comp.gen_blocks
+                    >= sched.n_blocks_total)
+                n_done += 1
+        self.stats.slot_ticks += sched.stats.slot_ticks - slot0
+        self.stats.active_slot_ticks += \
+            sched.stats.active_slot_ticks - active0
+        self.last_call = {
+            "batching": "continuous",
+            "ticks": sched.stats.ticks - ticks0,
+            "utilization": (sched.stats.active_slot_ticks - active0)
+            / max(sched.stats.slot_ticks - slot0, 1),
+        }
+        return {"tokens": jnp.asarray(tokens), "steps": jnp.asarray(steps),
+                "gen_blocks": jnp.asarray(gen_blocks),
+                "prompt_blocks": jnp.asarray(prompt_blocks, jnp.int32),
+                "done": jnp.asarray(done),
+                "denoise_steps": jnp.asarray(denoise)}
+
+    # ------------------------------------------------- streaming serve
+    def _encode_prompt(self, prompt: str) -> tuple[np.ndarray, int]:
+        bsz = self.model.cfg.block_size
+        enc = pad_to_block(self.tok.encode(prompt, bos=True), bsz,
+                           self.tok.pad_id)
+        return np.asarray(enc, np.int32), len(enc) // bsz
+
+    def submit(self, prompt: str, rng) -> int:
+        """Queue one text request on the live pool; returns its uid."""
+        toks, blocks = self._encode_prompt(prompt)
+        return self.scheduler.submit(toks, blocks, rng)
+
+    def stream(self, params=None) -> Iterator[tuple[int, str]]:
+        """Drive the pool until it drains, yielding (uid, text) in
+        completion order — new ``submit``s may land mid-stream.
+
+        With ``params=None`` the live store weights are re-read every
+        tick, so in-place server updates take effect mid-stream."""
+        sched = self.scheduler
+        live = params is None
+        while sched.has_work or self._pending:
+            if sched.has_work:
+                p = self.store.params if live else params
+                t0 = time.perf_counter()
+                slot0 = sched.stats.slot_ticks
+                active0 = sched.stats.active_slot_ticks
+                self._pending.extend(sched.step(p))
+                self.stats.wall_seconds += time.perf_counter() - t0
+                self.stats.slot_ticks += sched.stats.slot_ticks - slot0
+                self.stats.active_slot_ticks += \
+                    sched.stats.active_slot_ticks - active0
+            # pop-one/yield-one: if the consumer abandons the generator
+            # mid-iteration, undelivered completions stay in _pending
+            # for the next stream() call
+            while self._pending:
+                comp = self._pending.pop(0)
+                self.stats.rollouts += 1
+                bsz = self.model.cfg.block_size
+                self.stats.total_tokens += comp.gen_blocks * bsz
+                self.stats.total_steps += comp.denoise_steps
+                yield comp.uid, self._completion_text(comp)
+
+    def _completion_text(self, comp: Completion) -> str:
+        bsz = self.model.cfg.block_size
+        lo = comp.prompt_blocks * bsz
+        hi = lo + comp.gen_blocks * bsz
+        return self._trim_eos(comp.tokens[lo:hi])
+
+    def _trim_eos(self, ids: np.ndarray) -> str:
+        """Decode a completion, trimmed at the first EOS token."""
+        eos = np.flatnonzero(ids == self.gen_cfg.eos_id)
+        if eos.size:
+            ids = ids[:eos[0]]
+        return self.tok.decode(ids)
+
+    # ----------------------------------------------------- batch texts
     def generate_texts(self, prompts: Sequence[str], rng) -> list[str]:
         bsz = self.model.cfg.block_size
-        encs = [pad_to_block(self.tok.encode(p, bos=True), bsz,
-                             self.tok.pad_id) for p in prompts]
-        lp = max(len(e) for e in encs)
+        encs = [self._encode_prompt(p) for p in prompts]
+        lp = max(e.shape[0] for e, _ in encs)
         toks = np.zeros((len(prompts), lp), np.int32)
         blocks = np.zeros((len(prompts),), np.int32)
-        for i, e in enumerate(encs):
-            toks[i, :len(e)] = e
-            blocks[i] = len(e) // bsz
+        for i, (e, nb) in enumerate(encs):
+            toks[i, :e.shape[0]] = e
+            blocks[i] = nb
         gen = self.generate_ids(toks, blocks, rng)
         outs = []
         for i in range(len(prompts)):
             start = int(blocks[i]) * bsz
             end = start + int(gen["gen_blocks"][i]) * bsz
-            outs.append(self.tok.decode(np.asarray(gen["tokens"][i,
-                                                                 start:end])))
+            outs.append(self._trim_eos(np.asarray(gen["tokens"][i,
+                                                               start:end])))
         return outs

@@ -1,0 +1,290 @@
+"""Slot-based continuous-batching scheduler for blockwise-dLLM decoding.
+
+Architecture
+------------
+The scheduler owns a fixed pool of ``n_slots`` decode slots backed by one
+batched ``core.decoding.GenState`` (tokens / step maps / KV+SSM caches /
+per-slot block cursors / per-slot rng keys).  Time advances in *ticks*:
+one tick = one call of the jitted ``core.decoding.advance_block`` over
+the whole pool, i.e. every live slot denoises and commits exactly one
+block.  Between ticks — block boundaries, the only points where a
+blockwise dLLM can change batch composition without corrupting caches —
+the scheduler runs its Python-side control loop:
+
+  admit    queued requests are prefetched into freed slots: a B=1
+           ``prefill`` builds the request's cache rows, which are then
+           scattered into the pool's cache region for that slot together
+           with its prompt tokens, rng key, cursor and block budget;
+  advance  one jitted pool step (inactive slots are ``done`` and merely
+           re-commit their frozen block — idempotent by construction);
+  evict    slots whose sequence hit EOS or its block budget are
+           harvested into ``Completion`` records and returned to the
+           free list.
+
+Request lifecycle: ``submit() -> queued -> admitted (slot) -> decoding
+-> completed`` — completions stream out of ``step()``/``run()`` in
+finish order, not arrival order.
+
+DiPO-exactness: every row of ``advance_block`` evolves independently
+(per-row caches, per-row rng streams), so a request's tokens and step
+map depend only on its own prompt + rng key — *not* on which other
+requests happen to share the pool.  Continuous batching therefore
+produces token-identical outputs to the one-shot ``generate`` under the
+same per-sequence keys (tested in tests/test_scheduler.py), and RL
+rollouts harvested from the scheduler remain exactly consumable by the
+DiPO trajectory replay.
+
+Follow-ups tracked in ROADMAP.md: paged KV-cache (slot-size decoupled
+from ``max_len``) and multi-host pools.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decoding
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (prompt already tokenised, block-aligned)."""
+    uid: int
+    prompt: np.ndarray           # (Lp,) int32, Lp a block multiple
+    prompt_blocks: int           # true prompt length in blocks
+    rng: jax.Array               # (2,) per-request rng key
+    max_new_blocks: int | None = None   # None = fill cache capacity
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request, harvested at eviction time."""
+    uid: int
+    tokens: np.ndarray           # (max_len,) prompt ++ generation ++ MASK
+    steps: np.ndarray            # (max_len,) per-token reveal-step map
+    prompt_blocks: int
+    gen_blocks: int
+    denoise_steps: int           # actual denoise steps executed (dynamic)
+    finished_eos: bool           # True: EOS; False: hit block budget
+    admitted_tick: int
+    completed_tick: int
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Honest utilization counters (the fig6/serve_bench substrate)."""
+    ticks: int = 0               # pool advance steps executed
+    slot_ticks: int = 0          # ticks * n_slots (paid compute)
+    active_slot_ticks: int = 0   # slot-ticks that advanced a live request
+    admitted: int = 0
+    completed: int = 0
+    gen_tokens: int = 0          # tokens produced (gen_blocks * block)
+    denoise_steps: int = 0       # actual denoise steps across requests
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of paid slot-ticks that did useful work."""
+        return self.active_slot_ticks / max(self.slot_ticks, 1)
+
+
+class SlotScheduler:
+    """Fixed-slot continuous batcher over one jitted block-advance."""
+
+    def __init__(self, model, n_slots: int, max_len: int, *,
+                 s_max: int = 8, mode: str = "dynamic", tau: float = 0.9,
+                 n_steps: int = 8, temperature: float = 0.0,
+                 eos_id: int = 1):
+        cfg = model.cfg
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        assert max_len % cfg.block_size == 0
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.n_blocks_total = max_len // cfg.block_size
+        self.eos_id = eos_id
+        self.stats = SchedulerStats()
+
+        self._queue: deque[Request] = deque()
+        self._slot_req: list[Request | None] = [None] * n_slots
+        self._slot_admit_tick: list[int] = [0] * n_slots
+        self._next_uid = 0
+        self._state = self._init_pool()
+
+        # donate the pool state: the old GenState (slot caches included)
+        # is always dead after the call, so advance/admit alias their
+        # buffers in place instead of holding a 2x-peak copy per tick
+        # (backends without donation support just ignore the hint)
+        self._advance = jax.jit(functools.partial(
+            decoding.advance_block, model, mode=mode, tau=tau,
+            n_steps=n_steps, temperature=temperature, s_max=s_max,
+            eos_id=eos_id), donate_argnums=(1,))
+        self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(1,))
+
+    # ----------------------------------------------------------- state
+    def _init_pool(self) -> decoding.GenState:
+        cfg = self.model.cfg
+        S, L = self.n_slots, self.max_len
+        MASK = cfg.resolved_mask_token
+        return decoding.GenState(
+            tokens=jnp.full((S, L), MASK, jnp.int32),
+            steps=jnp.zeros((S, L), jnp.int32),
+            caches=self.model.make_caches(S, L),
+            blk=jnp.zeros((S,), jnp.int32),
+            done=jnp.ones((S,), bool),        # all slots start free
+            rng=jnp.zeros((S, 2), jnp.uint32),
+            limit=jnp.zeros((S,), jnp.int32),
+            n_denoise=jnp.zeros((S,), jnp.int32))
+
+    def _admit_impl(self, params, st: decoding.GenState, slot,
+                    prompt, pblocks, key, limit) -> decoding.GenState:
+        """Prefill one request (B=1) and scatter it into slot ``slot``.
+
+        Compiles once per distinct prompt width (a block multiple); the
+        slot index and all per-request scalars are traced, so steady-state
+        admission is a single cached executable.
+        """
+        cfg = self.model.cfg
+        MASK = cfg.resolved_mask_token
+        caches1 = decoding.prefill(self.model, params, prompt, pblocks,
+                                   self.max_len)
+        row = jnp.concatenate(
+            [prompt[0].astype(jnp.int32),
+             jnp.full((self.max_len - prompt.shape[1],), MASK, jnp.int32)])
+        # prefix cache leaves are (B, ...); group leaves are (G, B, ...)
+        caches = {
+            "prefix": jax.tree.map(lambda p, n: p.at[slot].set(n[0]),
+                                   st.caches["prefix"],
+                                   caches1["prefix"]),
+            "groups": jax.tree.map(lambda p, n: p.at[:, slot].set(n[:, 0]),
+                                   st.caches["groups"],
+                                   caches1["groups"]),
+        }
+        return decoding.GenState(
+            tokens=st.tokens.at[slot].set(row),
+            steps=st.steps.at[slot].set(0),
+            caches=caches,
+            blk=st.blk.at[slot].set(pblocks[0]),
+            done=st.done.at[slot].set(False),
+            rng=st.rng.at[slot].set(key),
+            limit=st.limit.at[slot].set(limit),
+            n_denoise=st.n_denoise.at[slot].set(0))
+
+    def _empty_completion(self, req: Request) -> Completion:
+        cfg = self.model.cfg
+        tokens = np.full((self.max_len,), cfg.resolved_mask_token,
+                         np.int32)
+        tokens[:req.prompt.shape[0]] = req.prompt
+        self.stats.admitted += 1
+        self.stats.completed += 1
+        return Completion(
+            uid=req.uid, tokens=tokens,
+            steps=np.zeros((self.max_len,), np.int32),
+            prompt_blocks=req.prompt_blocks, gen_blocks=0,
+            denoise_steps=0, finished_eos=False,
+            admitted_tick=self.stats.ticks,
+            completed_tick=self.stats.ticks)
+
+    # ------------------------------------------------------------- API
+    def submit(self, prompt: np.ndarray, prompt_blocks: int, rng, *,
+               max_new_blocks: int | None = None) -> int:
+        """Queue a request; returns its uid (completions carry it)."""
+        prompt = np.asarray(prompt, np.int32)
+        assert prompt.ndim == 1 and \
+            prompt.shape[0] % self.model.cfg.block_size == 0
+        assert prompt.shape[0] <= self.max_len
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid=uid, prompt=prompt,
+                                   prompt_blocks=int(prompt_blocks),
+                                   rng=jnp.asarray(rng),
+                                   max_new_blocks=max_new_blocks))
+        return uid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(
+            r is not None for r in self._slot_req)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    def step(self, params) -> list[Completion]:
+        """One scheduler tick: admit -> advance -> evict.
+
+        Returns the completions harvested this tick (possibly empty).
+        """
+        # ---- admit queued requests into free slots -------------------
+        out: list[Completion] = []
+        for slot in range(self.n_slots):
+            if not self._queue or self._slot_req[slot] is not None:
+                continue
+            req = self._queue.popleft()
+            budget = self.n_blocks_total - req.prompt_blocks
+            if req.max_new_blocks is not None:
+                budget = min(budget, req.max_new_blocks)
+            if budget <= 0:
+                # nothing to decode (prompt fills the cache / zero block
+                # budget) — complete immediately, never touch a slot
+                out.append(self._empty_completion(req))
+                continue
+            limit = req.prompt_blocks + budget
+            self._state = self._admit_jit(
+                params, self._state, jnp.int32(slot), req.prompt[None],
+                jnp.asarray([req.prompt_blocks], jnp.int32), req.rng,
+                jnp.int32(limit))
+            self._slot_req[slot] = req
+            self._slot_admit_tick[slot] = self.stats.ticks
+            self.stats.admitted += 1
+
+        if not any(r is not None for r in self._slot_req):
+            return out
+
+        # ---- advance the whole pool by one block ---------------------
+        self._state = self._advance(params, self._state)
+        self.stats.ticks += 1
+        self.stats.slot_ticks += self.n_slots
+        self.stats.active_slot_ticks += self.n_active
+
+        # ---- evict finished slots ------------------------------------
+        done = np.asarray(self._state.done)
+        for slot in range(self.n_slots):
+            req = self._slot_req[slot]
+            if req is None or not done[slot]:
+                continue
+            tokens = np.asarray(self._state.tokens[slot])
+            steps = np.asarray(self._state.steps[slot])
+            gen_blocks = int(self._state.blk[slot]) - req.prompt_blocks
+            bsz = self.model.cfg.block_size
+            lo, hi = req.prompt_blocks * bsz, \
+                (req.prompt_blocks + gen_blocks) * bsz
+            eos = bool((tokens[lo:hi] == self.eos_id).any())
+            comp = Completion(
+                uid=req.uid, tokens=tokens, steps=steps,
+                prompt_blocks=req.prompt_blocks, gen_blocks=gen_blocks,
+                denoise_steps=int(self._state.n_denoise[slot]),
+                finished_eos=eos,
+                admitted_tick=self._slot_admit_tick[slot],
+                completed_tick=self.stats.ticks)
+            out.append(comp)
+            self._slot_req[slot] = None
+            self.stats.completed += 1
+            self.stats.gen_tokens += gen_blocks * bsz
+            self.stats.denoise_steps += comp.denoise_steps
+        return out
+
+    def run(self, params) -> Iterator[Completion]:
+        """Drive ticks until queue + slots drain, streaming completions."""
+        while self.has_work:
+            yield from self.step(params)

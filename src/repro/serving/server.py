@@ -10,6 +10,7 @@ it replaces: every step saves a checkpoint and the "server" re-loads it
 
 from __future__ import annotations
 
+import glob
 import os
 import tempfile
 import time
@@ -72,7 +73,19 @@ class OfflineWeightStore:
         self.version += 1
         save_pytree(self._path(self.version), new_params)
         self.save_seconds = time.perf_counter() - t0
+        self._gc(keep=self.version)
         return self.version
+
+    def _gc(self, keep: int) -> None:
+        """Delete superseded checkpoints — an online RL run writes one
+        per step, which is unbounded disk growth if never reaped."""
+        for p in glob.glob(os.path.join(self.root, "ckpt_*.msgpack")):
+            if p == self._path(keep):
+                continue
+            try:
+                os.remove(p)
+            except OSError:
+                pass
 
     @property
     def params(self):

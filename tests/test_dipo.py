@@ -3,6 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip file when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dipo import dipo_loss, group_advantages

@@ -1,0 +1,235 @@
+"""Continuous-batching scheduler: parity with one-shot generate, plus
+admission/eviction invariants under ragged arrival order."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decoding
+from repro.models.config import ModelConfig
+from repro.models.model import BlockDiffLM
+from repro.serving.engine import GenerationConfig, RolloutEngine
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.server import ModelServer
+
+CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=128, block_size=8,
+                  attn_impl="structured")
+BSZ = CFG.block_size
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = BlockDiffLM(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (4, 16), 4, 100))
+    pblocks = np.array([2, 1, 2, 1], np.int32)
+    return model, params, prompt, pblocks
+
+
+def test_parity_with_one_shot_generate(setup):
+    """A 2-slot pool serving 4 requests (forcing queueing + admission
+    mid-flight) reproduces one-shot generate token-for-token, step-map
+    included, under the same per-sequence rng keys and temperature
+    sampling — the DiPO-exactness property."""
+    model, params, prompt, pblocks = setup
+    rng = jax.random.PRNGKey(7)
+    gen = decoding.generate(model, params, jnp.asarray(prompt),
+                            jnp.asarray(pblocks), rng, max_len=MAX_LEN,
+                            s_max=4, mode="dynamic", tau=0.6,
+                            temperature=1.0, eos_id=1)
+
+    sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=4,
+                          mode="dynamic", tau=0.6, temperature=1.0,
+                          eos_id=1)
+    keys = jax.random.split(rng, 4)
+    max_new = (MAX_LEN - prompt.shape[1]) // BSZ
+    for i in range(4):
+        sched.submit(prompt[i], pblocks[i], keys[i],
+                     max_new_blocks=max_new)
+    comps = {c.uid: c for c in sched.run(params)}
+    assert sorted(comps) == [0, 1, 2, 3]
+    for i in range(4):
+        c = comps[i]
+        gb = int(gen["gen_blocks"][i])
+        assert c.gen_blocks == gb
+        hi = (int(pblocks[i]) + gb) * BSZ
+        np.testing.assert_array_equal(c.tokens[:hi],
+                                      np.asarray(gen["tokens"][i, :hi]))
+        np.testing.assert_array_equal(c.steps[:hi],
+                                      np.asarray(gen["steps"][i, :hi]))
+        assert c.denoise_steps == int(gen["denoise_steps"][i])
+
+
+def test_engine_static_continuous_identical(setup):
+    """The engine's two batching paths agree on the full gen dict."""
+    model, params, prompt, pblocks = setup
+    rng = jax.random.PRNGKey(11)
+    outs = {}
+    for mode in ["static", "continuous"]:
+        eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+            max_len=MAX_LEN, s_max=4, mode="dynamic", tau=0.6,
+            temperature=1.0, batching=mode, n_slots=3))
+        outs[mode] = eng.generate_ids(prompt, pblocks, rng)
+    a, b = outs["static"], outs["continuous"]
+    for k in ["gen_blocks", "denoise_steps", "done", "prompt_blocks"]:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    for i in range(4):
+        hi = int((pblocks[i] + a["gen_blocks"][i]) * BSZ)
+        np.testing.assert_array_equal(np.asarray(a["tokens"][i, :hi]),
+                                      np.asarray(b["tokens"][i, :hi]))
+        np.testing.assert_array_equal(np.asarray(a["steps"][i, :hi]),
+                                      np.asarray(b["steps"][i, :hi]))
+
+
+def test_admission_eviction_invariants(setup):
+    """Ragged arrival order on a small pool: every request completes
+    exactly once, prompts survive verbatim, slot occupancy never exceeds
+    the pool, and the utilization counters add up."""
+    model, params, prompt, pblocks = setup
+    sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
+                          mode="dynamic", tau=0.9, eos_id=1)
+    key = jax.random.PRNGKey(3)
+    submitted = {}
+    completions = []
+    arrivals = [2, 0, 0, 1, 3, 0, 1]   # requests arriving per tick
+    t = 0
+    while arrivals or sched.has_work:
+        n_new = arrivals.pop(0) if arrivals else 0
+        for _ in range(n_new):
+            key, k = jax.random.split(key)
+            i = len(submitted) % 4
+            uid = sched.submit(prompt[i], pblocks[i], k)
+            submitted[uid] = i
+        assert sched.n_active <= sched.n_slots
+        completions.extend(sched.step(params))
+        t += 1
+        assert t < 200
+
+    # exactly-once completion, in-order uids
+    uids = [c.uid for c in completions]
+    assert sorted(uids) == sorted(submitted)
+    assert len(set(uids)) == len(uids)
+
+    for c in completions:
+        i = submitted[c.uid]
+        # prompt region preserved verbatim
+        np.testing.assert_array_equal(
+            c.tokens[:int(pblocks[i]) * BSZ],
+            prompt[i, :int(pblocks[i]) * BSZ])
+        # generated region fully revealed (no MASK left)
+        lo = c.prompt_blocks * BSZ
+        hi = lo + c.gen_blocks * BSZ
+        assert (c.tokens[lo:hi] != CFG.resolved_mask_token).all()
+        assert 0 < c.gen_blocks <= sched.n_blocks_total - c.prompt_blocks
+        assert c.admitted_tick <= c.completed_tick
+
+    st = sched.stats
+    assert st.admitted == st.completed == len(submitted)
+    assert st.slot_ticks == st.ticks * sched.n_slots
+    assert 0 < st.active_slot_ticks <= st.slot_ticks
+    assert st.gen_tokens == sum(c.gen_blocks for c in completions) * BSZ
+    assert st.denoise_steps == sum(c.denoise_steps for c in completions)
+    # pool drained: all slots free again
+    assert sched.n_active == 0 and sched.n_queued == 0
+
+
+def test_zero_budget_request_completes_without_slot(setup):
+    """A prompt that already fills the cache (or a zero block budget)
+    completes immediately with gen_blocks=0 and never occupies a slot —
+    matching one-shot generate's zero-iteration behaviour."""
+    model, params, prompt, pblocks = setup
+    sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3)
+    full = np.full((MAX_LEN,), 5, np.int32)
+    sched.submit(full, MAX_LEN // BSZ, jax.random.PRNGKey(0))
+    sched.submit(prompt[0], pblocks[0], jax.random.PRNGKey(1),
+                 max_new_blocks=0)
+    comps = list(sched.run(params))
+    assert [c.gen_blocks for c in comps] == [0, 0]
+    np.testing.assert_array_equal(comps[0].tokens, full)
+    assert sched.stats.ticks == 0 and sched.n_active == 0
+
+
+def test_generate_texts_trims_at_eos(setup, monkeypatch):
+    """Completions are cut at the first EOS, not the block-padded tail."""
+    model, params, _, _ = setup
+    eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+        max_len=MAX_LEN, s_max=4, mode="dynamic", tau=0.6,
+        batching="continuous", n_slots=2))
+    # craft a completion: prompt block, then "ok" ++ EOS ++ junk tail
+    tokens = np.full((1, MAX_LEN), 5, np.int32)
+    gen_row = eng.tok.encode("ok") + [eng.tok.eos_id] + \
+        eng.tok.encode("JUNKJUNKJUNK")
+    tokens[0, BSZ:BSZ + len(gen_row)] = gen_row
+    fake = {"tokens": jnp.asarray(tokens),
+            "steps": jnp.zeros((1, MAX_LEN), jnp.int32),
+            "gen_blocks": jnp.asarray([2], jnp.int32),
+            "prompt_blocks": jnp.asarray([1], jnp.int32),
+            "done": jnp.asarray([True]),
+            "denoise_steps": jnp.asarray([2], jnp.int32)}
+    monkeypatch.setattr(eng, "generate_ids", lambda *a, **k: fake)
+    out, = eng.generate_texts(["x"], jax.random.PRNGKey(5))
+    assert out == "ok"          # junk beyond the first EOS is trimmed
+
+
+def test_stream_abandoned_midway_keeps_undelivered(setup):
+    """Taking only the first result from stream() must not lose the
+    rest — undelivered completions stay pending for the next call."""
+    model, params, prompt, pblocks = setup
+    eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+        max_len=MAX_LEN, s_max=3, mode="dynamic", tau=0.9,
+        batching="continuous", n_slots=3))
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    uids = {eng.submit(f"q{i}", keys[i]) for i in range(3)}
+    first = next(eng.stream())          # abandon the generator here
+    rest = dict(eng.stream())
+    assert {first[0], *rest} == uids
+    assert len(rest) == 2
+
+
+def test_zero_budget_done_flag_matches_static(setup):
+    """A prompt filling the cache: both paths return done=False (the
+    one-shot loop runs zero trips and never flags it)."""
+    model, params, _, _ = setup
+    full = np.full((2, MAX_LEN), 5, np.int32)
+    pb = np.full((2,), MAX_LEN // BSZ, np.int32)
+    rng = jax.random.PRNGKey(0)
+    outs = {}
+    for mode in ["static", "continuous"]:
+        eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+            max_len=MAX_LEN, s_max=3, batching=mode, n_slots=2))
+        outs[mode] = eng.generate_ids(full, pb, rng)
+    for k in ["done", "gen_blocks", "tokens"]:
+        np.testing.assert_array_equal(np.asarray(outs["static"][k]),
+                                      np.asarray(outs["continuous"][k]))
+    assert not np.asarray(outs["continuous"]["done"]).any()
+
+
+def test_stream_request_survives_batch_drain(setup):
+    """A streaming submit() that finishes while generate_ids drains the
+    shared pool is buffered and still delivered by the next stream()."""
+    model, params, prompt, pblocks = setup
+    eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+        max_len=MAX_LEN, s_max=3, mode="dynamic", tau=0.9,
+        batching="continuous", n_slots=2))
+    uid = eng.submit("hi", jax.random.PRNGKey(0))
+    eng.generate_ids(prompt, pblocks, jax.random.PRNGKey(1))
+    got = dict(eng.stream())
+    assert uid in got and isinstance(got[uid], str)
+
+
+def test_offline_store_gc(tmp_path, setup):
+    """Superseded checkpoints are reaped; only the latest survives."""
+    import os
+    from repro.serving.server import OfflineWeightStore
+    model, params, _, _ = setup
+    store = OfflineWeightStore(params, root=str(tmp_path))
+    for _ in range(3):
+        store.update_weights(params)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".msgpack")]
+    assert files == [f"ckpt_{store.version}.msgpack"]
+    # latest is still loadable
+    assert store.params is not None
