@@ -1,19 +1,30 @@
 """Serving throughput: static lock-step batching vs the slot-based
-continuous batcher on a ragged mixed-length workload.
+continuous batcher, and dense vs paged KV layouts at equal cache memory.
 
-The static path (the pre-refactor engine) pads every request to the
-batch width and runs the full jitted block loop to cache capacity —
-sequences that hit EOS early keep re-committing frozen blocks until the
-trip count drains.  The continuous path serves the same requests through
-a small decode-slot pool that refills freed slots at block boundaries.
-Outputs are token-identical between the two (see tests/test_scheduler),
-so tokens/sec is an apples-to-apples comparison; ``utilization`` is the
-fraction of paid slot-steps that advanced a live request.
+Section 1 (static vs continuous): the static path (the pre-refactor
+engine) pads every request to the batch width and runs the full jitted
+block loop to cache capacity — sequences that hit EOS early keep
+re-committing frozen blocks until the batch drains.  The continuous path
+serves the same requests through a small decode-slot pool that refills
+freed slots at block boundaries.  Outputs are token-identical between
+the two (see tests/test_scheduler), so tokens/sec is an
+apples-to-apples comparison; ``utilization`` is the fraction of paid
+slot-steps that advanced a live request.
+
+Section 2 (dense vs paged): same KV budget — the paged pool gets exactly
+the pages a 4-slot dense pool would reserve (``4 * n_blocks + 1``) but
+three times the slots.  Requests carry a realistic per-request block
+budget, so the paged scheduler's reservation-based admission packs more
+concurrent requests into the same memory (``peak_active``), while dense
+concurrency stays capped at 4 by worst-case-length slot regions.
+Tokens are byte-identical across the two layouts; ``gen_tokens`` counts
+to the first EOS inclusive.
 """
 
 from __future__ import annotations
 
 import random
+import time
 
 import jax
 import numpy as np
@@ -22,6 +33,7 @@ from repro.data.math_tasks import sample_problem
 from repro.data.pipeline import pad_to_block
 from repro.serving.engine import (EngineStats, GenerationConfig,
                                   RolloutEngine)
+from repro.serving.scheduler import SlotScheduler
 from repro.serving.server import ModelServer
 
 
@@ -43,6 +55,56 @@ def _ragged_workload(tok, block_size: int, n_req: int):
         toks[i, :len(e)] = e
         blocks[i] = len(e) // block_size
     return toks, blocks
+
+
+def _drain_sched(params, sched, toks, blocks, keys, budget):
+    for i in range(toks.shape[0]):
+        sched.submit(toks[i], int(blocks[i]), keys[i],
+                     max_new_blocks=budget)
+    t0 = time.perf_counter()
+    comps = list(sched.run(params))
+    return comps, time.perf_counter() - t0
+
+
+def _paged_vs_dense(model, params, toks, blocks, max_len, budget):
+    """Same requests, same keys, equal KV memory: dense 4 slots vs a
+    paged pool holding the dense pool's pages but 3x the slots."""
+    cfg = model.cfg
+    K = max_len // cfg.block_size
+    dense_slots = 4
+    n_pages = dense_slots * K + 1
+    keys = jax.random.split(jax.random.PRNGKey(3), toks.shape[0])
+    rows = []
+    ref = None
+    for cache, slots in [("dense", dense_slots),
+                         ("paged", 3 * dense_slots)]:
+        kw = dict(cache=cache)
+        if cache == "paged":
+            kw["n_pages"] = n_pages
+        sched = SlotScheduler(
+            model, n_slots=slots, max_len=max_len, s_max=4,
+            mode="dynamic", tau=0.7, temperature=1.0, eos_id=1, **kw)
+        # warm the jit caches on the same instance, then reset stats
+        _drain_sched(params, sched, toks, blocks, keys, budget)
+        sched.stats = type(sched.stats)()
+        comps, dt = _drain_sched(params, sched, toks, blocks, keys,
+                                 budget)
+        got = {c.uid: c for c in comps}
+        if ref is None:
+            ref = got
+        else:  # layouts must agree token-for-token
+            for uid, c in ref.items():
+                hi = (c.prompt_blocks + c.gen_blocks) * cfg.block_size
+                np.testing.assert_array_equal(c.tokens[:hi],
+                                              got[uid].tokens[:hi])
+        s = sched.stats
+        kv_blocks = dense_slots * K if cache == "dense" else n_pages - 1
+        rows.append(
+            f"{cache},{slots},{kv_blocks},{len(comps)},{s.gen_tokens},"
+            f"{dt:.3f},{s.gen_tokens / max(dt, 1e-9):.0f},{s.ticks},"
+            f"{s.peak_active},{s.utilization:.3f},"
+            f"{s.peak_pages_in_use},{s.deferred}")
+    return rows
 
 
 def run(quick: bool = True) -> list[str]:
@@ -70,6 +132,12 @@ def run(quick: bool = True) -> list[str]:
             f"{s.wall_seconds:.3f},"
             f"{s.total_tokens / max(s.wall_seconds, 1e-9):.0f},"
             f"{s.total_steps},{util:.3f}")
+
+    rows.append("cache,slots,kv_blocks,requests,gen_tokens,wall_s,"
+                "tok_per_s,ticks,peak_active,utilization,"
+                "peak_pages,deferred")
+    budget = 3 if quick else 4          # response cap in blocks
+    rows += _paged_vs_dense(model, params, toks, blocks, max_len, budget)
     return rows
 
 

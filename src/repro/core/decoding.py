@@ -34,6 +34,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .masks import plain_layout
 
@@ -49,6 +50,9 @@ class GenState:
     rng: jax.Array         # (B, 2) per-sequence rng keys
     limit: jax.Array       # (B,) exclusive block cursor cap per sequence
     n_denoise: jax.Array   # (B,) cumulative denoise steps actually used
+    # paged caches only: (B, L_max // block_size) block -> page id, -1 =
+    # no page (None when the caches are dense per-sequence regions)
+    table: jax.Array | None = None
 
 
 def _per_seq_keys(rng, batch: int) -> jax.Array:
@@ -86,20 +90,22 @@ def _select_boundary(caches, bounds, prompt_blocks):
 
 
 def prefill(model, params, prompt_tokens, prompt_blocks, max_len: int, *,
-            memory=None, memory_valid=None):
+            ring: bool = True, memory=None, memory_valid=None):
     """Run the committed pass over (block-aligned, right-padded) prompts.
 
     prompt_tokens (B, Lp) with Lp a block multiple; prompt_blocks (B,) the
     per-sequence true prompt length in blocks.  Returns caches sized for
     ``max_len`` with every prompt position written (positions beyond a
     sequence's true prompt are masked at decode time via cache_limit and
-    overwritten on commit).
+    overwritten on commit).  ``ring=False`` keeps sliding-window layers'
+    buffers full-length (needed when the rows are re-scattered into a
+    paged pool block-by-block).
     """
     cfg = model.cfg
     B, Lp = prompt_tokens.shape
     valid = jnp.ones((B, Lp), bool)
     meta = plain_layout(prompt_tokens, valid, block_size=cfg.block_size)
-    caches = model.make_caches(B, max_len)
+    caches = model.make_caches(B, max_len, ring=ring)
     want_b = bool(cfg.ssm_kind)
     _, out = model.forward_masked(params, prompt_tokens, meta,
                                   caches=caches, want_boundaries=want_b,
@@ -112,7 +118,7 @@ def prefill(model, params, prompt_tokens, prompt_blocks, max_len: int, *,
 
 def denoise_block(model, params, caches, blk, rng, *,
                   mode: str, tau: float, n_steps: int,
-                  temperature: float, s_max: int,
+                  temperature: float, s_max: int, table=None,
                   memory=None, memory_valid=None):
     """Denoise one block for every sequence.
 
@@ -138,6 +144,7 @@ def denoise_block(model, params, caches, blk, rng, *,
         ids, step_map, rng = carry
         logits, _ = model.decode_step(params, ids, pos, caches,
                                       cache_limit=cache_limit,
+                                      block_table=table,
                                       memory=memory,
                                       memory_valid=memory_valid)
         lf = logits.astype(jnp.float32)
@@ -203,7 +210,7 @@ def advance_block(model, params, st: GenState, *,
     ids, step_map, pos, rng, steps_used = denoise_block(
         model, params, st.caches, blk, st.rng, mode=mode, tau=tau,
         n_steps=n_steps, temperature=temperature, s_max=s_max,
-        memory=memory, memory_valid=memory_valid)
+        table=st.table, memory=memory, memory_valid=memory_valid)
     # frozen sequences re-commit their existing block (idempotent)
     old_ids = jnp.take_along_axis(st.tokens, pos, axis=1)
     old_steps = jnp.take_along_axis(st.steps, pos, axis=1)
@@ -211,7 +218,8 @@ def advance_block(model, params, st: GenState, *,
     step_map = jnp.where(st.done[:, None], old_steps, step_map)
 
     _, caches = model.decode_step(params, ids, pos, st.caches,
-                                  cache_limit=blk * bsz, write=True,
+                                  cache_limit=blk * bsz,
+                                  block_table=st.table, write=True,
                                   memory=memory,
                                   memory_valid=memory_valid)
     tokens = st.tokens.at[rows, pos].set(ids)
@@ -224,7 +232,7 @@ def advance_block(model, params, st: GenState, *,
     n_denoise = st.n_denoise + jnp.where(st.done, 0, steps_used)
     return GenState(tokens=tokens, steps=steps, caches=caches,
                     blk=new_blk, done=done, rng=rng, limit=st.limit,
-                    n_denoise=n_denoise)
+                    n_denoise=n_denoise, table=st.table)
 
 
 def init_state(model, params, prompt_tokens, prompt_blocks, rng, *,
@@ -247,12 +255,17 @@ def init_state(model, params, prompt_tokens, prompt_blocks, rng, *,
          jnp.full((B, max_len - Lp), MASK, prompt_tokens.dtype)], axis=1)
     if limit is None:
         limit = jnp.full((B,), n_blocks_total, jnp.int32)
+    limit = jnp.asarray(limit, jnp.int32)
+    blk = prompt_blocks.astype(jnp.int32)
+    # rows with no block budget (prompt fills the cache / limit <=
+    # prompt) start frozen: advance_block would otherwise denoise-commit
+    # over their last prompt block
     return GenState(tokens=tokens.astype(jnp.int32),
                     steps=jnp.zeros((B, max_len), jnp.int32),
-                    caches=caches, blk=prompt_blocks.astype(jnp.int32),
-                    done=jnp.zeros((B,), bool),
+                    caches=caches, blk=blk,
+                    done=blk >= limit,
                     rng=_per_seq_keys(rng, B),
-                    limit=jnp.asarray(limit, jnp.int32),
+                    limit=limit,
                     n_denoise=jnp.zeros((B,), jnp.int32))
 
 
@@ -266,10 +279,15 @@ def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
     Returns {"tokens" (B, L_max), "steps" (B, L_max), "gen_blocks" (B,),
     "prompt_blocks" (B,), "done" (B,), "denoise_steps" (B,)} — everything
     RolloutBatch and the engine stats need.
+
+    The loop runs until every row is done (EOS or its own block budget),
+    NOT for a trip count derived from the padded prompt width: in a
+    ragged batch a row whose true prompt is shorter than the padding has
+    more blocks of budget than ``(max_len - Lp) // bsz``, and cutting it
+    off there silently truncated it without EOS (diverging from the
+    continuous-batching scheduler, which runs each slot to its limit).
     """
-    bsz = model.cfg.block_size
-    Lp = prompt_tokens.shape[1]
-    max_new_blocks = (max_len - Lp) // bsz
+    n_blocks_total = max_len // model.cfg.block_size
 
     st = init_state(model, params, prompt_tokens, prompt_blocks, rng,
                     max_len=max_len, memory=memory,
@@ -279,15 +297,43 @@ def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
                              temperature=temperature, s_max=s_max,
                              eos_id=eos_id, memory=memory,
                              memory_valid=memory_valid)
-    st = jax.lax.fori_loop(0, max_new_blocks, lambda _, s: step(st=s), st)
+    # every live row advances its cursor each trip, so n_blocks_total
+    # trips is a hard ceiling; the counter is belt-and-braces
+    _, st = jax.lax.while_loop(
+        lambda c: (c[0] < n_blocks_total) & ~c[1].done.all(),
+        lambda c: (c[0] + 1, step(st=c[1])),
+        (jnp.int32(0), st))
     return {
         "tokens": st.tokens,
         "steps": st.steps,
         "gen_blocks": st.blk - prompt_blocks,
         "prompt_blocks": prompt_blocks,
-        "done": st.done,
+        # zero-budget rows never decoded: report them not-done, matching
+        # the scheduler's empty completions
+        "done": st.done & (st.blk > prompt_blocks),
         "denoise_steps": st.n_denoise,
     }
+
+
+def count_gen_tokens(tokens, prompt_blocks, gen_blocks, *, eos_id: int,
+                     block_size: int) -> np.ndarray:
+    """Per-sequence generated-token count, cut at the first EOS.
+
+    Counts tokens in the generated region up to and *including* the
+    first EOS (the whole region when no EOS landed) — the honest
+    tokens/sec numerator: when EOS lands mid-block the rest of that
+    block is padding the consumer trims, not served output.
+    """
+    tokens = np.asarray(tokens)
+    pb = np.asarray(prompt_blocks).astype(np.int64)
+    gb = np.asarray(gen_blocks).astype(np.int64)
+    out = np.zeros((tokens.shape[0],), np.int64)
+    for i in range(tokens.shape[0]):
+        lo, hi = pb[i] * block_size, (pb[i] + gb[i]) * block_size
+        region = tokens[i, lo:hi]
+        eos = np.flatnonzero(region == eos_id)
+        out[i] = eos[0] + 1 if eos.size else hi - lo
+    return out
 
 
 def rollout_to_batch(gen: dict, rewards, group, block_size: int):
@@ -297,6 +343,16 @@ def rollout_to_batch(gen: dict, rewards, group, block_size: int):
     pos_blk = jnp.arange(L, dtype=jnp.int32)[None, :] // block_size
     prompt_mask = pos_blk < gen["prompt_blocks"][:, None]
     valid = pos_blk < (gen["prompt_blocks"] + gen["gen_blocks"])[:, None]
+    if not isinstance(gen["gen_blocks"], jax.core.Tracer):
+        gb = np.asarray(gen["gen_blocks"])
+        assert (gb >= 0).all(), "negative gen_blocks in rollout"
+        # an empty rollout must be explicitly all-prompt: a step map
+        # claiming reveals on a gen_blocks == 0 row would relabel prompt
+        # tokens as revealed-at-step-0 generation in the DiPO replay
+        empty = gb == 0
+        if empty.any() and not isinstance(gen["steps"], jax.core.Tracer):
+            assert (np.asarray(gen["steps"])[empty] == 0).all(), \
+                "gen_blocks == 0 row carries a nonzero reveal-step map"
     return RolloutBatch(tokens=gen["tokens"], steps=gen["steps"],
                         prompt_mask=prompt_mask, valid=valid,
                         rewards=rewards, group=group)

@@ -23,6 +23,11 @@ def main():
                     default="continuous")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode-slot pool size (continuous batching)")
+    ap.add_argument("--cache", choices=["dense", "paged"],
+                    default="dense",
+                    help="KV layout: per-slot regions | shared page pool")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged: pool size (default = dense-equivalent)")
     args = ap.parse_args()
 
     import jax
@@ -46,7 +51,8 @@ def main():
     server = ModelServer(params)
     engine = RolloutEngine(model, server, GenerationConfig(
         max_len=args.max_len, s_max=args.s_max, mode="dynamic",
-        tau=args.tau, batching=args.batching, n_slots=args.slots))
+        tau=args.tau, batching=args.batching, n_slots=args.slots,
+        cache=args.cache, n_pages=args.pages))
     rng = random.Random(0)
     prompts = [sample_problem(rng, level=0).prompt
                for _ in range(args.requests)]

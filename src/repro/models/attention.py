@@ -12,6 +12,17 @@ Every mixer supports three execution modes (see model.py):
 KV caches store *rotated* keys with explicit position ids so sliding-window
 ring buffers and sequence-sharded caches need no extra bookkeeping:
 ``pos < 0`` marks unfilled slots.
+
+Two decode-cache layouts share the same attention math:
+
+* ``AttnCache``       — dense: every sequence owns a contiguous
+                        (S, ...) region (prefill, replay, one-shot
+                        generate, and the scheduler's ``cache="dense"``);
+* ``PagedAttnCache``  — a shared pool of block-sized pages addressed
+                        through a per-sequence block table (the
+                        scheduler's ``cache="paged"``), so cache memory
+                        scales with tokens actually held, not with
+                        worst-case sequence length per slot.
 """
 
 from __future__ import annotations
@@ -34,12 +45,118 @@ class AttnCache(NamedTuple):
     pos: jax.Array  # (B, S) int32, -1 = empty
 
 
+class PagedAttnCache(NamedTuple):
+    """A shared pool of ``block_size``-token KV pages (vLLM-style).
+
+    Sequences do not own contiguous cache rows; a per-sequence *block
+    table* (carried in ``GenState.table``, shape (B, n_blocks)) maps each
+    sequence's block index to the page holding its keys.  Table entry -1
+    means "no page": reads of such blocks are masked invalid and writes
+    are dumped into page 0 — the *null page*, which an allocator must
+    never hand out and whose ``pos`` is forced to -1 on every dump so it
+    can never leak into attention.
+    """
+    k: jax.Array    # (P, bsz, Hkv, Dk) rotated
+    v: jax.Array    # (P, bsz, Hkv, Dv)
+    pos: jax.Array  # (P, bsz) int32, -1 = empty
+
+
 def make_attn_cache(batch: int, seq: int, n_kv: int, dk: int, dv: int,
                     dtype) -> AttnCache:
     return AttnCache(
         k=jnp.zeros((batch, seq, n_kv, dk), dtype),
         v=jnp.zeros((batch, seq, n_kv, dv), dtype),
         pos=jnp.full((batch, seq), -1, jnp.int32))
+
+
+def make_paged_attn_cache(n_pages: int, block_size: int, n_kv: int,
+                          dk: int, dv: int, dtype) -> PagedAttnCache:
+    return PagedAttnCache(
+        k=jnp.zeros((n_pages, block_size, n_kv, dk), dtype),
+        v=jnp.zeros((n_pages, block_size, n_kv, dv), dtype),
+        pos=jnp.full((n_pages, block_size), -1, jnp.int32))
+
+
+def paged_gather(cache: PagedAttnCache, table: jax.Array):
+    """Gather each sequence's pages into key order.
+
+    table (B, K) int32 -> (k, v, pos) with a (B, K*bsz, ...) layout that
+    matches a dense full-length cache row block-for-block; unallocated
+    blocks (table -1) read the null page with ``pos`` forced to -1, so
+    the ordinary pos-validity mask hides them.
+
+    NOTE: this materializes a dense-width K/V copy per layer per decode
+    step, so *transient* decode memory still scales with slots x K*bsz
+    even though the resident pool is paged — a page-aware attention
+    kernel that reads the pool in place is the follow-up that removes
+    the copy (ROADMAP).
+    """
+    B, K = table.shape
+    idx = jnp.maximum(table, 0)                    # -1 -> null page 0
+    k, v, pos = cache.k[idx], cache.v[idx], cache.pos[idx]
+    pos = jnp.where(table[:, :, None] >= 0, pos, -1)
+    bsz = cache.k.shape[1]
+    return (k.reshape(B, K * bsz, *cache.k.shape[2:]),
+            v.reshape(B, K * bsz, *cache.v.shape[2:]),
+            pos.reshape(B, K * bsz))
+
+
+def paged_cache_write(cache: PagedAttnCache, k: jax.Array, v: jax.Array,
+                      positions: jax.Array,
+                      table: jax.Array) -> PagedAttnCache:
+    """Commit one block-aligned block per sequence into its own page.
+
+    ``positions`` (B, bsz) must cover exactly one block per row.  Rows
+    whose block has no page (table -1 — e.g. an evicted slot idempotently
+    re-committing its frozen block) are dumped into the null page with
+    ``pos`` = -1, so they can never corrupt a live sequence's page.
+    """
+    bsz = cache.k.shape[1]
+    rows = jnp.arange(k.shape[0], dtype=jnp.int32)
+    page = table[rows, positions[:, 0] // bsz]     # (B,)
+    safe = jnp.maximum(page, 0)
+    pos_w = jnp.where(page[:, None] >= 0, positions.astype(jnp.int32), -1)
+    return PagedAttnCache(
+        k=cache.k.at[safe].set(k.astype(cache.k.dtype)),
+        v=cache.v.at[safe].set(v.astype(cache.v.dtype)),
+        pos=cache.pos.at[safe].set(pos_w))
+
+
+def write_prompt_pages(cache: PagedAttnCache, row: AttnCache,
+                       pages: jax.Array) -> PagedAttnCache:
+    """Scatter a B=1 dense prefill row into freshly allocated pages.
+
+    ``row`` leaves are (1, L, ...) with L a block multiple (a ring-free
+    prefill); ``pages`` (Kp,) holds the page ids for the first Kp blocks.
+    """
+    bsz = cache.k.shape[1]
+    Kp = pages.shape[0]
+
+    def blocks(a):
+        L = a.shape[1]
+        return a.reshape(L // bsz, bsz, *a.shape[2:])[:Kp]
+
+    return PagedAttnCache(
+        k=cache.k.at[pages].set(blocks(row.k).astype(cache.k.dtype)),
+        v=cache.v.at[pages].set(blocks(row.v).astype(cache.v.dtype)),
+        pos=cache.pos.at[pages].set(blocks(row.pos)))
+
+
+def write_prompt_pages_grouped(cache: PagedAttnCache, row: AttnCache,
+                               pages: jax.Array) -> PagedAttnCache:
+    """``write_prompt_pages`` for G-stacked group caches: pool leaves are
+    (G, P, bsz, ...) and the prefill row's are (G, 1, L, ...)."""
+    bsz = cache.k.shape[2]
+    Kp = pages.shape[0]
+
+    def blocks(a):
+        G, _, L = a.shape[:3]
+        return a.reshape(G, L // bsz, bsz, *a.shape[3:])[:, :Kp]
+
+    return PagedAttnCache(
+        k=cache.k.at[:, pages].set(blocks(row.k).astype(cache.k.dtype)),
+        v=cache.v.at[:, pages].set(blocks(row.v).astype(cache.v.dtype)),
+        pos=cache.pos.at[:, pages].set(blocks(row.pos)))
 
 
 def cache_write(cache: AttnCache, k: jax.Array, v: jax.Array,
@@ -118,34 +235,55 @@ def _cache_decode_attention(q, keys, vals, key_pos, key_valid, q_pos, *,
     return mha_reference(q, keys, vals, mask, scale=scale, softcap=softcap)
 
 
-def _decode_key_mask(cache: AttnCache, positions, cache_limit):
+def _decode_key_mask(cache_pos, positions, cache_limit):
     """validity of (cache ++ self) keys given a per-sequence cache limit."""
-    cvalid = cache.pos >= 0
+    cvalid = cache_pos >= 0
     if cache_limit is not None:
         lim = jnp.asarray(cache_limit)
         if lim.ndim == 0:
             lim = lim[None]
-        cvalid = cvalid & (cache.pos < lim[:, None])
+        cvalid = cvalid & (cache_pos < lim[:, None])
     svalid = jnp.ones(positions.shape, bool)
     return jnp.concatenate([cvalid, svalid], axis=1)
 
 
-def gqa_decode(p, x, positions, cache: AttnCache, cfg: ModelConfig, *,
+def _decode_cache_kv(cache, block_table, dtype):
+    """(cache k, v, pos) in per-sequence key order for either layout."""
+    if isinstance(cache, PagedAttnCache):
+        ck, cv, cpos = paged_gather(cache, block_table)
+    else:
+        ck, cv, cpos = cache.k, cache.v, cache.pos
+    return ck.astype(dtype), cv.astype(dtype), cpos
+
+
+def _decode_cache_update(cache, k_self, v_self, positions, block_table):
+    if isinstance(cache, PagedAttnCache):
+        return paged_cache_write(cache, k_self, v_self, positions,
+                                 block_table)
+    return cache_write(cache, k_self, v_self, positions)
+
+
+def gqa_decode(p, x, positions, cache, cfg: ModelConfig, *,
                window: int | None, write_cache: bool,
-               cache_limit=None) -> tuple[jax.Array, AttnCache]:
-    """decode mode: block queries vs cache ++ self-block (bidirectional)."""
+               cache_limit=None, block_table=None):
+    """decode mode: block queries vs cache ++ self-block (bidirectional).
+
+    ``cache`` is a dense per-sequence ``AttnCache`` or a shared
+    ``PagedAttnCache`` (then ``block_table`` (B, K) maps block -> page).
+    """
     B, n, _ = x.shape
     q, k_self, v_self = gqa_qkv(p, x, positions, cfg)
-    keys = jnp.concatenate([cache.k.astype(k_self.dtype), k_self], axis=1)
-    vals = jnp.concatenate([cache.v.astype(v_self.dtype), v_self], axis=1)
-    key_pos = jnp.concatenate([cache.pos, positions.astype(jnp.int32)], axis=1)
-    key_valid = _decode_key_mask(cache, positions, cache_limit)
+    ck, cv, cpos = _decode_cache_kv(cache, block_table, k_self.dtype)
+    keys = jnp.concatenate([ck, k_self], axis=1)
+    vals = jnp.concatenate([cv, v_self], axis=1)
+    key_pos = jnp.concatenate([cpos, positions.astype(jnp.int32)], axis=1)
+    key_valid = _decode_key_mask(cpos, positions, cache_limit)
     o = _cache_decode_attention(
         q, keys, vals, key_pos, key_valid, positions,
         scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
         window=window)
-    new_cache = cache_write(cache, k_self, v_self, positions) \
-        if write_cache else cache
+    new_cache = _decode_cache_update(cache, k_self, v_self, positions,
+                                     block_table) if write_cache else cache
     return linear(p["wo"], o.reshape(B, n, -1)), new_cache
 
 
@@ -243,20 +381,21 @@ def mla_masked(p, x, meta: SeqMeta, cfg: ModelConfig, *,
     return _mla_out(p, o, cfg), k, v
 
 
-def mla_decode(p, x, positions, cache: AttnCache, cfg: ModelConfig, *,
+def mla_decode(p, x, positions, cache, cfg: ModelConfig, *,
                window: int | None, write_cache: bool,
-               cache_limit=None) -> tuple[jax.Array, AttnCache]:
+               cache_limit=None, block_table=None):
     q = _mla_q_latent(p, x, positions, cfg)
     k_self, v_self = _mla_kv_latent(p, x, positions, cfg)
-    keys = jnp.concatenate([cache.k.astype(k_self.dtype), k_self], axis=1)
-    vals = jnp.concatenate([cache.v.astype(v_self.dtype), v_self], axis=1)
-    key_pos = jnp.concatenate([cache.pos, positions.astype(jnp.int32)], axis=1)
-    key_valid = _decode_key_mask(cache, positions, cache_limit)
+    ck, cv, cpos = _decode_cache_kv(cache, block_table, k_self.dtype)
+    keys = jnp.concatenate([ck, k_self], axis=1)
+    vals = jnp.concatenate([cv, v_self], axis=1)
+    key_pos = jnp.concatenate([cpos, positions.astype(jnp.int32)], axis=1)
+    key_valid = _decode_key_mask(cpos, positions, cache_limit)
     o = _cache_decode_attention(
         q, keys, vals, key_pos, key_valid, positions,
         scale=_mla_scale(cfg), softcap=None, window=window)
-    new_cache = cache_write(cache, k_self, v_self, positions) \
-        if write_cache else cache
+    new_cache = _decode_cache_update(cache, k_self, v_self, positions,
+                                     block_table) if write_cache else cache
     return _mla_out(p, o, cfg), new_cache
 
 

@@ -34,6 +34,7 @@ class LayerCtx:
     # decode mode
     positions: jax.Array | None = None     # (B, n) absolute positions
     cache_limit: jax.Array | None = None   # scalar/(B,): cache pos < limit
+    block_table: jax.Array | None = None   # (B, K): paged caches only
     write_cache: bool = dataclasses.field(
         default=False, metadata={"static": True})
     # cross attention

@@ -156,7 +156,8 @@ def _apply_mixer(cfg: ModelConfig, spec: LayerSpec, lp, h, ctx: LayerCtx,
         y, new_cache = decode_fn(lp["attn"], h, ctx.positions, cache, cfg,
                                  window=spec.window,
                                  write_cache=ctx.write_cache,
-                                 cache_limit=ctx.cache_limit)
+                                 cache_limit=ctx.cache_limit,
+                                 block_table=ctx.block_table)
         return y, new_cache, None
     if spec.mixer in ("rwkv6", "mamba"):
         return _apply_ssm(cfg, spec, lp, h, ctx, cache)
@@ -478,14 +479,17 @@ class BlockDiffLM:
                         "boundaries": bounds}
 
     def decode_step(self, params, block_ids, positions, caches, *,
-                    cache_limit=None, memory=None, memory_valid=None,
-                    write: bool = False):
+                    cache_limit=None, block_table=None, memory=None,
+                    memory_valid=None, write: bool = False):
         """One denoise forward of the current block (serve_step).
 
         block_ids/positions: (B, block_size).  Returns (logits, caches).
+        ``block_table`` (B, K) is required iff the attention caches are
+        paged (``make_paged_caches``); dense caches ignore it.
         """
         ctx = LayerCtx(mode="decode", positions=positions,
-                       cache_limit=cache_limit, write_cache=write,
+                       cache_limit=cache_limit, block_table=block_table,
+                       write_cache=write,
                        memory=memory, memory_valid=memory_valid)
         x = self._embed(params, block_ids)
         x, new_caches, _, _ = self._run_stack(params, x, ctx, caches)
@@ -507,13 +511,49 @@ class BlockDiffLM:
         one = {f"l{j}": _layer_cache_struct(self.cfg, s, batch, cache_len,
                                             ring)
                for j, s in enumerate(self.group_specs)}
+        return {"prefix": prefix, "groups": self._stack_groups(one)}
+
+    def make_paged_caches(self, batch: int, n_pages: int):
+        """Paged decode caches for ``batch`` slots over ``n_pages`` pages.
+
+        Attention layers get a shared ``PagedAttnCache`` pool of
+        block-size pages (page 0 is the null page — the allocator must
+        never hand it out); recurrent/conv states are O(1) per sequence
+        and stay per-slot exactly as in ``make_caches``.  Reads/writes go
+        through the (batch, n_blocks) block table in ``GenState.table``.
+        """
+        prefix = {f"l{i}": self._paged_layer_cache_struct(s, batch, n_pages)
+                  for i, s in enumerate(self.prefix_specs)}
+        one = {f"l{j}": self._paged_layer_cache_struct(s, batch, n_pages)
+               for j, s in enumerate(self.group_specs)}
+        return {"prefix": prefix, "groups": self._stack_groups(one)}
+
+    def _paged_layer_cache_struct(self, spec: LayerSpec, batch: int,
+                                  n_pages: int):
+        cfg = self.cfg
+        if spec.mixer == "attn":
+            dt = jnp.dtype(cfg.dtype)
+            if cfg.attn_kind == "mla":
+                return attn.make_paged_attn_cache(
+                    n_pages, cfg.block_size, 1,
+                    cfg.kv_lora_rank + cfg.qk_rope_dim, cfg.kv_lora_rank,
+                    dt)
+            return attn.make_paged_attn_cache(
+                n_pages, cfg.block_size, cfg.n_kv_heads,
+                cfg.resolved_head_dim, cfg.resolved_head_dim, dt)
+        # recurrent / conv / no-cache layers: per-slot, unchanged
+        return _layer_cache_struct(cfg, spec, batch, cfg.block_size)
+
+    def _stack_groups(self, one):
+        """Stack a single group's cache struct G times (pos sentinel
+        preserved)."""
         groups = jax.tree.map(
             lambda a: jnp.zeros((self.n_groups,) + a.shape, a.dtype), one)
         # restore pos = -1 sentinel
         groups = jax.tree.map(
             lambda z, o: jnp.broadcast_to(o[None], z.shape).astype(z.dtype)
             if o.dtype == jnp.int32 else z, groups, one)
-        return {"prefix": prefix, "groups": groups}
+        return groups
 
     def param_count(self, params) -> int:
         return sum(p.size for p in jax.tree_util.tree_leaves(params))

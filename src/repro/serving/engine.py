@@ -16,8 +16,15 @@ Contracts kept:
   * ``generate_texts`` — texts trimmed at the first EOS.
   * ``EngineStats`` — throughput counters, now *honest*:
     ``total_steps`` counts denoise steps actually executed (dynamic
-    early-exit included), not ``blocks * s_max``; continuous runs also
-    record slot utilization (active slot-ticks / paid slot-ticks).
+    early-exit included), not ``blocks * s_max``; ``total_tokens``
+    counts generated tokens up to the first EOS inclusive (not the
+    block-padded tail); continuous runs also record slot utilization
+    (active slot-ticks / paid slot-ticks).
+
+The continuous path's KV layout is selectable: ``cache="dense"`` (each
+slot owns a ``max_len`` cache region) or ``cache="paged"`` (slots share
+an ``n_pages`` pool of block-sized pages through per-slot block tables —
+see serving.scheduler).  Both produce byte-identical tokens.
 
 The engine reads weights from a ``ModelServer`` (in-place updates) or
 ``OfflineWeightStore`` (checkpoint baseline) — swapping one for the
@@ -53,6 +60,8 @@ class GenerationConfig:
     eos_id: int = 1
     batching: str = "continuous"  # continuous (slot pool) | static
     n_slots: int = 8             # continuous: decode-slot pool size
+    cache: str = "dense"         # continuous: dense | paged KV layout
+    n_pages: int | None = None   # paged: pool size (None = dense-equal)
 
 
 @dataclasses.dataclass
@@ -103,7 +112,8 @@ class RolloutEngine:
             self._sched = SlotScheduler(
                 self.model, n_slots=g.n_slots, max_len=g.max_len,
                 s_max=g.s_max, mode=g.mode, tau=g.tau, n_steps=g.n_steps,
-                temperature=g.temperature, eos_id=g.eos_id)
+                temperature=g.temperature, eos_id=g.eos_id,
+                cache=g.cache, n_pages=g.n_pages)
         return self._sched
 
     # ------------------------------------------------------------------
@@ -126,9 +136,12 @@ class RolloutEngine:
                                                 prompt_blocks, rng)
         dt = time.perf_counter() - t0
         B = prompt_tokens.shape[0]
-        bsz = self.model.cfg.block_size
         self.stats.rollouts += B
-        self.stats.total_tokens += int(jnp.sum(gen["gen_blocks"])) * bsz
+        # honest tokens/sec numerator: count only up to the first EOS
+        self.stats.total_tokens += int(decoding.count_gen_tokens(
+            gen["tokens"], gen["prompt_blocks"], gen["gen_blocks"],
+            eos_id=self.gen_cfg.eos_id,
+            block_size=self.model.cfg.block_size).sum())
         self.stats.total_steps += int(jnp.sum(gen["denoise_steps"]))
         self.stats.wall_seconds += dt
         return gen
@@ -140,16 +153,16 @@ class RolloutEngine:
         prompt_tokens = np.asarray(prompt_tokens)
         prompt_blocks = np.asarray(prompt_blocks)
         B, Lp = prompt_tokens.shape
-        bsz = self.model.cfg.block_size
         max_len = self.gen_cfg.max_len
-        # match the static path's iteration budget (batch-wide): each
-        # request may generate at most (max_len - Lp_padded) blocks
-        max_new = (max_len - Lp) // bsz
+        # the one-shot generate runs every row to its own block budget
+        # (EOS or cache capacity), so the slot pool must too — a budget
+        # derived from the *padded* width would truncate short-prompt
+        # rows and break static/continuous parity
         keys = decoding._per_seq_keys(rng, B)
         uid_to_row = {}
         for i in range(B):
             uid = sched.submit(prompt_tokens[i], int(prompt_blocks[i]),
-                               keys[i], max_new_blocks=max_new)
+                               keys[i], max_new_blocks=None)
             uid_to_row[uid] = i
 
         tokens = np.zeros((B, max_len), np.int32)
@@ -232,8 +245,7 @@ class RolloutEngine:
             while self._pending:
                 comp = self._pending.pop(0)
                 self.stats.rollouts += 1
-                bsz = self.model.cfg.block_size
-                self.stats.total_tokens += comp.gen_blocks * bsz
+                self.stats.total_tokens += comp.gen_tokens
                 self.stats.total_steps += comp.denoise_steps
                 yield comp.uid, self._completion_text(comp)
 

@@ -3,8 +3,8 @@
 Architecture
 ------------
 The scheduler owns a fixed pool of ``n_slots`` decode slots backed by one
-batched ``core.decoding.GenState`` (tokens / step maps / KV+SSM caches /
-per-slot block cursors / per-slot rng keys).  Time advances in *ticks*:
+batched ``core.decoding.GenState`` (tokens / step maps / per-slot block
+cursors / per-slot rng keys / decode caches).  Time advances in *ticks*:
 one tick = one call of the jitted ``core.decoding.advance_block`` over
 the whole pool, i.e. every live slot denoises and commits exactly one
 block.  Between ticks — block boundaries, the only points where a
@@ -13,29 +13,61 @@ the scheduler runs its Python-side control loop:
 
   admit    queued requests are prefetched into freed slots: a B=1
            ``prefill`` builds the request's cache rows, which are then
-           scattered into the pool's cache region for that slot together
-           with its prompt tokens, rng key, cursor and block budget;
+           scattered into the pool for that slot together with its
+           prompt tokens, rng key, cursor and block budget;
   advance  one jitted pool step (inactive slots are ``done`` and merely
            re-commit their frozen block — idempotent by construction);
   evict    slots whose sequence hit EOS or its block budget are
            harvested into ``Completion`` records and returned to the
            free list.
 
+Cache layouts (``cache=``)
+--------------------------
+``"dense"``  every slot owns a contiguous ``max_len`` cache region; slot
+             count is therefore capped by worst-case length, and a short
+             request reserves as much KV memory as the longest one.
+
+``"paged"``  the vLLM-style fix: attention KV lives in one shared pool
+             of ``n_pages`` block-sized pages (``models.attention.
+             PagedAttnCache``; one page = one ``block_size`` block,
+             matching the blockwise commit granularity), addressed
+             through a per-slot block table carried in
+             ``GenState.table``.  Recurrent/conv states are O(1) per
+             sequence and stay per-slot.  Page lifecycle:
+
+               * admission  — one page per true prompt block, filled by
+                 scattering the B=1 prefill row block-by-block;
+               * advance    — one page per live slot for the block its
+                 cursor is about to commit;
+               * eviction   — all of a slot's pages return to the free
+                 list and its table row is reset to -1, so the slot's
+                 subsequent idempotent re-commits dump into the null
+                 page (page 0, never allocated) instead of a page that
+                 may already belong to another request.
+
+             Admission reserves a request's worst case (``prompt_blocks
+             + budget`` pages) up front, so mid-flight allocation can
+             never fail and there is no preemption; when the head of the
+             queue does not fit, admission *defers* (backpressure,
+             counted in ``stats.deferred``) until evictions free pages —
+             it never crashes.  Short-budget requests therefore stop
+             reserving long-request memory, and slot count decouples
+             from ``max_len``.
+
 Request lifecycle: ``submit() -> queued -> admitted (slot) -> decoding
 -> completed`` — completions stream out of ``step()``/``run()`` in
 finish order, not arrival order.
 
 DiPO-exactness: every row of ``advance_block`` evolves independently
-(per-row caches, per-row rng streams), so a request's tokens and step
-map depend only on its own prompt + rng key — *not* on which other
-requests happen to share the pool.  Continuous batching therefore
-produces token-identical outputs to the one-shot ``generate`` under the
-same per-sequence keys (tested in tests/test_scheduler.py), and RL
-rollouts harvested from the scheduler remain exactly consumable by the
-DiPO trajectory replay.
+(per-row caches or per-row block-table entries, per-row rng streams), so
+a request's tokens and step map depend only on its own prompt + rng key
+— *not* on which other requests happen to share the pool, nor on the
+cache layout: paged and dense produce byte-identical tokens and step
+maps (tested in tests/test_scheduler.py), so RL rollouts harvested from
+the scheduler remain exactly consumable by the DiPO trajectory replay.
 
-Follow-ups tracked in ROADMAP.md: paged KV-cache (slot-size decoupled
-from ``max_len``) and multi-host pools.
+Follow-ups tracked in ROADMAP.md: multi-host pools and batched
+same-width admission.
 """
 
 from __future__ import annotations
@@ -50,13 +82,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import decoding
+from repro.models import attention
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request (prompt already tokenised, block-aligned)."""
     uid: int
-    prompt: np.ndarray           # (Lp,) int32, Lp a block multiple
+    prompt: np.ndarray           # (Lp,) int32, Lp = prompt_blocks * bsz
     prompt_blocks: int           # true prompt length in blocks
     rng: jax.Array               # (2,) per-request rng key
     max_new_blocks: int | None = None   # None = fill cache capacity
@@ -70,6 +103,7 @@ class Completion:
     steps: np.ndarray            # (max_len,) per-token reveal-step map
     prompt_blocks: int
     gen_blocks: int
+    gen_tokens: int              # generated tokens up to first EOS incl.
     denoise_steps: int           # actual denoise steps executed (dynamic)
     finished_eos: bool           # True: EOS; False: hit block budget
     admitted_tick: int
@@ -84,8 +118,14 @@ class SchedulerStats:
     active_slot_ticks: int = 0   # slot-ticks that advanced a live request
     admitted: int = 0
     completed: int = 0
-    gen_tokens: int = 0          # tokens produced (gen_blocks * block)
+    gen_tokens: int = 0          # tokens served, cut at first EOS incl.
     denoise_steps: int = 0       # actual denoise steps across requests
+    peak_active: int = 0         # max concurrently live slots
+    # paged cache only
+    deferred: int = 0            # admissions deferred for lack of pages
+    page_allocs: int = 0
+    page_frees: int = 0
+    peak_pages_in_use: int = 0
 
     @property
     def utilization(self) -> float:
@@ -99,17 +139,37 @@ class SlotScheduler:
     def __init__(self, model, n_slots: int, max_len: int, *,
                  s_max: int = 8, mode: str = "dynamic", tau: float = 0.9,
                  n_steps: int = 8, temperature: float = 0.0,
-                 eos_id: int = 1):
+                 eos_id: int = 1, cache: str = "dense",
+                 n_pages: int | None = None):
         cfg = model.cfg
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if cache not in ("dense", "paged"):
+            raise ValueError(f"cache must be dense|paged, got {cache!r}")
         assert max_len % cfg.block_size == 0
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.n_blocks_total = max_len // cfg.block_size
         self.eos_id = eos_id
+        self.cache = cache
         self.stats = SchedulerStats()
+
+        if cache == "paged":
+            # default: the same KV footprint a dense pool would reserve,
+            # plus the never-allocated null page 0
+            self.n_pages = n_pages if n_pages is not None \
+                else n_slots * self.n_blocks_total + 1
+            if self.n_pages < 2:
+                raise ValueError("paged cache needs >= 2 pages")
+            self._free_pages = list(range(self.n_pages - 1, 0, -1))
+            self._table_host = np.full(
+                (n_slots, self.n_blocks_total), -1, np.int64)
+            self._pages_reserved = 0          # worst case of live slots
+            self._slot_limit = [0] * n_slots
+            self._slot_blk = [0] * n_slots    # host mirror of state.blk
+        else:
+            self.n_pages = 0
 
         self._queue: deque[Request] = deque()
         self._slot_req: list[Request | None] = [None] * n_slots
@@ -128,44 +188,87 @@ class SlotScheduler:
         self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(1,))
 
     # ----------------------------------------------------------- state
+    @property
+    def n_usable_pages(self) -> int:
+        """Allocatable pages (excludes the null page)."""
+        return max(self.n_pages - 1, 0)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_usable_pages - len(self._free_pages) \
+            if self.cache == "paged" else 0
+
     def _init_pool(self) -> decoding.GenState:
         cfg = self.model.cfg
         S, L = self.n_slots, self.max_len
         MASK = cfg.resolved_mask_token
+        if self.cache == "paged":
+            caches = self.model.make_paged_caches(S, self.n_pages)
+            table = jnp.full((S, self.n_blocks_total), -1, jnp.int32)
+        else:
+            caches = self.model.make_caches(S, L)
+            table = None
         return decoding.GenState(
             tokens=jnp.full((S, L), MASK, jnp.int32),
             steps=jnp.zeros((S, L), jnp.int32),
-            caches=self.model.make_caches(S, L),
+            caches=caches,
             blk=jnp.zeros((S,), jnp.int32),
             done=jnp.ones((S,), bool),        # all slots start free
             rng=jnp.zeros((S, 2), jnp.uint32),
             limit=jnp.zeros((S,), jnp.int32),
-            n_denoise=jnp.zeros((S,), jnp.int32))
+            n_denoise=jnp.zeros((S,), jnp.int32),
+            table=table)
+
+    @staticmethod
+    def _scatter_layer(pool, new, slot, pages, *, grouped: bool):
+        """Scatter one layer of a B=1 prefill into the pool.
+
+        Paged attention layers scatter block-by-block into the request's
+        freshly allocated pages; per-slot states (SSM/conv/shift) scatter
+        into the slot's row as in the dense layout.
+        """
+        if pool is None:
+            return None
+        if isinstance(pool, attention.PagedAttnCache):
+            fn = attention.write_prompt_pages_grouped if grouped \
+                else attention.write_prompt_pages
+            return fn(pool, new, pages)
+        if grouped:  # group leaves carry a leading (G,) axis
+            return jax.tree.map(lambda p, n: p.at[:, slot].set(n[:, 0]),
+                                pool, new)
+        return jax.tree.map(lambda p, n: p.at[slot].set(n[0]), pool, new)
 
     def _admit_impl(self, params, st: decoding.GenState, slot,
-                    prompt, pblocks, key, limit) -> decoding.GenState:
+                    prompt, pblocks, key, limit,
+                    pages=None) -> decoding.GenState:
         """Prefill one request (B=1) and scatter it into slot ``slot``.
 
-        Compiles once per distinct prompt width (a block multiple); the
-        slot index and all per-request scalars are traced, so steady-state
-        admission is a single cached executable.
+        Compiles once per distinct true prompt length in blocks; the slot
+        index and all per-request scalars are traced, so steady-state
+        admission is a single cached executable.  ``pages`` (paged cache
+        only) holds one page id per prompt block.
         """
         cfg = self.model.cfg
         MASK = cfg.resolved_mask_token
+        paged = self.cache == "paged"
         caches1 = decoding.prefill(self.model, params, prompt, pblocks,
-                                   self.max_len)
+                                   self.max_len, ring=not paged)
         row = jnp.concatenate(
             [prompt[0].astype(jnp.int32),
              jnp.full((self.max_len - prompt.shape[1],), MASK, jnp.int32)])
-        # prefix cache leaves are (B, ...); group leaves are (G, B, ...)
         caches = {
-            "prefix": jax.tree.map(lambda p, n: p.at[slot].set(n[0]),
-                                   st.caches["prefix"],
-                                   caches1["prefix"]),
-            "groups": jax.tree.map(lambda p, n: p.at[:, slot].set(n[:, 0]),
-                                   st.caches["groups"],
-                                   caches1["groups"]),
+            "prefix": {
+                lk: self._scatter_layer(c, caches1["prefix"][lk], slot,
+                                        pages, grouped=False)
+                for lk, c in st.caches["prefix"].items()},
+            "groups": {
+                lk: self._scatter_layer(c, caches1["groups"][lk], slot,
+                                        pages, grouped=True)
+                for lk, c in st.caches["groups"].items()},
         }
+        table = st.table
+        if paged:
+            table = table.at[slot, :pages.shape[0]].set(pages)
         return decoding.GenState(
             tokens=st.tokens.at[slot].set(row),
             steps=st.steps.at[slot].set(0),
@@ -174,9 +277,18 @@ class SlotScheduler:
             done=st.done.at[slot].set(False),
             rng=st.rng.at[slot].set(key),
             limit=st.limit.at[slot].set(limit),
-            n_denoise=st.n_denoise.at[slot].set(0))
+            n_denoise=st.n_denoise.at[slot].set(0),
+            table=table)
 
     def _empty_completion(self, req: Request) -> Completion:
+        """Zero-budget request: completes without ever touching a slot.
+
+        The record is explicitly all-prompt: tokens beyond the true
+        prompt stay MASK, the reveal-step map is all zero and
+        ``gen_blocks == gen_tokens == 0`` — so downstream packaging
+        (``rollout_to_batch``) can never mistake the prompt for
+        revealed-at-step-0 generation.
+        """
         cfg = self.model.cfg
         tokens = np.full((self.max_len,), cfg.resolved_mask_token,
                          np.int32)
@@ -187,22 +299,31 @@ class SlotScheduler:
             uid=req.uid, tokens=tokens,
             steps=np.zeros((self.max_len,), np.int32),
             prompt_blocks=req.prompt_blocks, gen_blocks=0,
-            denoise_steps=0, finished_eos=False,
+            gen_tokens=0, denoise_steps=0, finished_eos=False,
             admitted_tick=self.stats.ticks,
             completed_tick=self.stats.ticks)
 
     # ------------------------------------------------------------- API
     def submit(self, prompt: np.ndarray, prompt_blocks: int, rng, *,
                max_new_blocks: int | None = None) -> int:
-        """Queue a request; returns its uid (completions carry it)."""
+        """Queue a request; returns its uid (completions carry it).
+
+        The prompt is trimmed to its true ``prompt_blocks`` blocks:
+        batch-padding blocks beyond that never influence decoding (the
+        cache limit masks them and commits overwrite them), and dropping
+        them keeps paged admission from allocating pages for padding.
+        """
         prompt = np.asarray(prompt, np.int32)
-        assert prompt.ndim == 1 and \
-            prompt.shape[0] % self.model.cfg.block_size == 0
-        assert prompt.shape[0] <= self.max_len
+        prompt_blocks = int(prompt_blocks)
+        bsz = self.model.cfg.block_size
+        assert prompt.ndim == 1 and prompt.shape[0] % bsz == 0
+        assert 1 <= prompt_blocks <= self.n_blocks_total
+        assert prompt_blocks * bsz <= prompt.shape[0]
         uid = self._next_uid
         self._next_uid += 1
-        self._queue.append(Request(uid=uid, prompt=prompt,
-                                   prompt_blocks=int(prompt_blocks),
+        self._queue.append(Request(uid=uid,
+                                   prompt=prompt[:prompt_blocks * bsz],
+                                   prompt_blocks=prompt_blocks,
                                    rng=jnp.asarray(rng),
                                    max_new_blocks=max_new_blocks))
         return uid
@@ -220,6 +341,72 @@ class SlotScheduler:
     def n_active(self) -> int:
         return sum(r is not None for r in self._slot_req)
 
+    # ------------------------------------------------- paged allocator
+    def _alloc_cursor_pages(self) -> None:
+        """Give every live slot a page for the block it commits next.
+
+        Cannot fail: admission reserved each request's worst case, and a
+        live slot's cursor is always below its limit, so at least one
+        reserved-but-unallocated page remains for it.
+        """
+        slots, blks, pages = [], [], []
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            b = self._slot_blk[slot]
+            if self._table_host[slot, b] < 0:
+                pg = self._free_pages.pop()
+                self._table_host[slot, b] = pg
+                slots.append(slot)
+                blks.append(b)
+                pages.append(pg)
+        if slots:
+            table = self._state.table.at[
+                jnp.asarray(slots, jnp.int32),
+                jnp.asarray(blks, jnp.int32)].set(
+                    jnp.asarray(pages, jnp.int32))
+            self._state = dataclasses.replace(self._state, table=table)
+        self.stats.page_allocs += len(slots)
+        self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
+                                           self.pages_in_use)
+
+    def _free_slot_pages(self, slot: int) -> list[int]:
+        row = self._table_host[slot]
+        pages = [int(p) for p in row[row >= 0]]
+        self._free_pages.extend(pages)
+        self.stats.page_frees += len(pages)
+        row[:] = -1
+        self._pages_reserved -= self._slot_limit[slot]
+        self._slot_limit[slot] = 0
+        return pages
+
+    def _invalidate_pages(self, pages: list[int]) -> None:
+        """Free-list hygiene: wipe the ``pos`` of pages being freed.
+
+        A reused page must look empty until its new owner writes it —
+        stale positions from the previous request could otherwise pass
+        the ``pos < cache_limit`` validity mask of a cursor page that is
+        allocated (for the commit) before it is first written.
+        """
+        idx = jnp.asarray(pages, jnp.int32)
+
+        def wipe(c, grouped):
+            if not isinstance(c, attention.PagedAttnCache):
+                return c
+            pos = c.pos.at[:, idx].set(-1) if grouped \
+                else c.pos.at[idx].set(-1)
+            return c._replace(pos=pos)
+
+        caches = self._state.caches
+        caches = {
+            "prefix": {lk: wipe(c, False)
+                       for lk, c in caches["prefix"].items()},
+            "groups": {lk: wipe(c, True)
+                       for lk, c in caches["groups"].items()},
+        }
+        self._state = dataclasses.replace(self._state, caches=caches)
+
+    # ------------------------------------------------------------ tick
     def step(self, params) -> list[Completion]:
         """One scheduler tick: admit -> advance -> evict.
 
@@ -230,35 +417,70 @@ class SlotScheduler:
         for slot in range(self.n_slots):
             if not self._queue or self._slot_req[slot] is not None:
                 continue
-            req = self._queue.popleft()
+            req = self._queue[0]
             budget = self.n_blocks_total - req.prompt_blocks
             if req.max_new_blocks is not None:
                 budget = min(budget, req.max_new_blocks)
             if budget <= 0:
                 # nothing to decode (prompt fills the cache / zero block
                 # budget) — complete immediately, never touch a slot
+                self._queue.popleft()
                 out.append(self._empty_completion(req))
                 continue
             limit = req.prompt_blocks + budget
+            if self.cache == "paged":
+                if limit > self.n_usable_pages:
+                    raise ValueError(
+                        f"request {req.uid} needs {limit} pages but the "
+                        f"pool only has {self.n_usable_pages}")
+                if self._pages_reserved + limit > self.n_usable_pages:
+                    # out of pages: defer the FIFO head until evictions
+                    # free some (backpressure, never a crash)
+                    self.stats.deferred += 1
+                    break
+            self._queue.popleft()
+            pages = None
+            if self.cache == "paged":
+                pages = [self._free_pages.pop()
+                         for _ in range(req.prompt_blocks)]
+                self._table_host[slot, :req.prompt_blocks] = pages
+                self._pages_reserved += limit
+                self._slot_limit[slot] = limit
+                self._slot_blk[slot] = req.prompt_blocks
+                self.stats.page_allocs += len(pages)
+                pages = jnp.asarray(pages, jnp.int32)
             self._state = self._admit_jit(
                 params, self._state, jnp.int32(slot), req.prompt[None],
                 jnp.asarray([req.prompt_blocks], jnp.int32), req.rng,
-                jnp.int32(limit))
+                jnp.int32(limit), pages)
             self._slot_req[slot] = req
             self._slot_admit_tick[slot] = self.stats.ticks
             self.stats.admitted += 1
 
+        self.stats.peak_active = max(self.stats.peak_active,
+                                     self.n_active)
         if not any(r is not None for r in self._slot_req):
             return out
 
         # ---- advance the whole pool by one block ---------------------
+        if self.cache == "paged":
+            self._alloc_cursor_pages()
         self._state = self._advance(params, self._state)
         self.stats.ticks += 1
         self.stats.slot_ticks += self.n_slots
         self.stats.active_slot_ticks += self.n_active
+        if self.cache == "paged":
+            # mirror advance_block's cursor update (live slots were all
+            # not-done going in): blk <- min(blk + 1, limit)
+            for slot, req in enumerate(self._slot_req):
+                if req is not None:
+                    self._slot_blk[slot] = min(self._slot_blk[slot] + 1,
+                                               self._slot_limit[slot])
 
         # ---- evict finished slots ------------------------------------
         done = np.asarray(self._state.done)
+        evicted: list[int] = []
+        freed_pages: list[int] = []
         for slot in range(self.n_slots):
             req = self._slot_req[slot]
             if req is None or not done[slot]:
@@ -269,19 +491,35 @@ class SlotScheduler:
             bsz = self.model.cfg.block_size
             lo, hi = req.prompt_blocks * bsz, \
                 (req.prompt_blocks + gen_blocks) * bsz
-            eos = bool((tokens[lo:hi] == self.eos_id).any())
+            # serve-stats count tokens up to and including the first
+            # EOS: the rest of an EOS block is padding, not output
+            gen_tokens = int(decoding.count_gen_tokens(
+                tokens[None], [req.prompt_blocks], [gen_blocks],
+                eos_id=self.eos_id, block_size=bsz)[0])
             comp = Completion(
                 uid=req.uid, tokens=tokens, steps=steps,
                 prompt_blocks=req.prompt_blocks, gen_blocks=gen_blocks,
+                gen_tokens=gen_tokens,
                 denoise_steps=int(self._state.n_denoise[slot]),
-                finished_eos=eos,
+                finished_eos=bool((tokens[lo:hi] == self.eos_id).any()),
                 admitted_tick=self._slot_admit_tick[slot],
                 completed_tick=self.stats.ticks)
             out.append(comp)
             self._slot_req[slot] = None
+            evicted.append(slot)
+            if self.cache == "paged":
+                freed_pages.extend(self._free_slot_pages(slot))
             self.stats.completed += 1
-            self.stats.gen_tokens += gen_blocks * bsz
+            self.stats.gen_tokens += gen_tokens
             self.stats.denoise_steps += comp.denoise_steps
+        if evicted and self.cache == "paged":
+            # reset the device table rows so the freed slots' idempotent
+            # re-commits dump into the null page, not into pages that
+            # may be re-allocated to other requests
+            table = self._state.table.at[
+                jnp.asarray(evicted, jnp.int32)].set(-1)
+            self._state = dataclasses.replace(self._state, table=table)
+            self._invalidate_pages(freed_pages)
         return out
 
     def run(self, params) -> Iterator[Completion]:

@@ -15,7 +15,10 @@ from repro.core.block_diffusion import sft_loss
 from repro.core.masks import plain_layout
 from repro.models.model import BlockDiffLM
 
-ARCHS = configs.ASSIGNED_ARCHS + ["sdar-8b", "tiny"]
+# the full arch zoo is heavyweight (minutes of compile on CPU): only the
+# tiny config stays in tier-1; the rest run under `pytest -m slow`
+ARCHS = [pytest.param(a, marks=pytest.mark.slow)
+         for a in configs.ASSIGNED_ARCHS + ["sdar-8b"]] + ["tiny"]
 
 
 def _extra_embeds(cfg, batch):

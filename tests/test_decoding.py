@@ -98,6 +98,61 @@ def test_determinism(setup):
                                   np.asarray(g2["tokens"]))
 
 
+def test_ragged_prompts_run_to_their_own_budget(setup):
+    """Regression: the loop count used to come from the *padded* prompt
+    width, so in a ragged batch the short-prompt row ran out of trips
+    before its own block limit and returned silently truncated, EOS-less
+    output.  Every row must now decode until EOS or its own budget."""
+    model, params, prompt, pblocks = setup
+    gen = decoding.generate(model, params, prompt, pblocks,
+                            jax.random.PRNGKey(2), max_len=48, s_max=3,
+                            mode="dynamic", tau=0.9, eos_id=1)
+    toks = np.asarray(gen["tokens"])
+    gb = np.asarray(gen["gen_blocks"])
+    done = np.asarray(gen["done"])
+    K = 48 // 8
+    for b, pb in enumerate([2, 1]):
+        hit_eos = bool(
+            (toks[b, pb * 8:(pb + gb[b]) * 8] == 1).any())
+        # full budget (down to the row's TRUE prompt) or EOS — never a
+        # padded-width cutoff
+        assert hit_eos or gb[b] == K - pb, (b, gb[b])
+        assert done[b]
+    # row 1's true prompt is one block shorter than the padding: it gets
+    # one more block of budget than the padded width suggests
+    assert gb[1] == K - 1 or (toks[1, 8:(1 + gb[1]) * 8] == 1).any()
+
+
+def test_full_prompt_row_not_corrupted_in_mixed_batch(setup):
+    """Regression: a row whose prompt fills the cache must stay frozen
+    (done at init) while other rows decode — advance_block used to
+    denoise-commit over its last prompt block."""
+    model, params, prompt, pblocks = setup
+    full = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (48,), 4, 100), np.int32)
+    toks = np.zeros((2, 48), np.int32)
+    toks[0, :16] = np.asarray(prompt[0, :16])
+    toks[1] = full
+    pb = jnp.asarray([2, 6], jnp.int32)
+    gen = decoding.generate(model, params, jnp.asarray(toks), pb,
+                            jax.random.PRNGKey(4), max_len=48, s_max=3,
+                            mode="dynamic", tau=0.9, eos_id=1)
+    np.testing.assert_array_equal(np.asarray(gen["tokens"][1]), full)
+    assert int(gen["gen_blocks"][1]) == 0
+    assert not bool(gen["done"][1])      # zero-budget rows report False
+    assert int(gen["gen_blocks"][0]) > 0
+
+
+def test_count_gen_tokens_cuts_at_first_eos():
+    toks = np.full((3, 32), 7, np.int32)
+    toks[0, 19] = 1          # EOS mid block 2
+    toks[1, 8] = 1           # EOS at the very first generated token
+    pb = np.array([1, 1, 1])
+    gb = np.array([3, 3, 0])
+    n = decoding.count_gen_tokens(toks, pb, gb, eos_id=1, block_size=8)
+    assert n.tolist() == [12, 1, 0]
+
+
 def test_rollout_batch_masks(setup):
     model, params, prompt, pblocks = setup
     gen = decoding.generate(model, params, prompt, pblocks,

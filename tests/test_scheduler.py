@@ -46,10 +46,8 @@ def test_parity_with_one_shot_generate(setup):
                           mode="dynamic", tau=0.6, temperature=1.0,
                           eos_id=1)
     keys = jax.random.split(rng, 4)
-    max_new = (MAX_LEN - prompt.shape[1]) // BSZ
     for i in range(4):
-        sched.submit(prompt[i], pblocks[i], keys[i],
-                     max_new_blocks=max_new)
+        sched.submit(prompt[i], pblocks[i], keys[i])
     comps = {c.uid: c for c in sched.run(params)}
     assert sorted(comps) == [0, 1, 2, 3]
     for i in range(4):
@@ -131,7 +129,14 @@ def test_admission_eviction_invariants(setup):
     assert st.admitted == st.completed == len(submitted)
     assert st.slot_ticks == st.ticks * sched.n_slots
     assert 0 < st.active_slot_ticks <= st.slot_ticks
-    assert st.gen_tokens == sum(c.gen_blocks for c in completions) * BSZ
+    assert st.gen_tokens == sum(c.gen_tokens for c in completions)
+    for c in completions:
+        # gen_tokens is cut at the first EOS inclusive, never padded
+        assert 0 < c.gen_tokens <= c.gen_blocks * BSZ
+        region = c.tokens[c.prompt_blocks * BSZ:
+                          (c.prompt_blocks + c.gen_blocks) * BSZ]
+        eos = np.flatnonzero(region == 1)
+        assert c.gen_tokens == (eos[0] + 1 if eos.size else region.size)
     assert st.denoise_steps == sum(c.denoise_steps for c in completions)
     # pool drained: all slots free again
     assert sched.n_active == 0 and sched.n_queued == 0
@@ -219,6 +224,163 @@ def test_stream_request_survives_batch_drain(setup):
     eng.generate_ids(prompt, pblocks, jax.random.PRNGKey(1))
     got = dict(eng.stream())
     assert uid in got and isinstance(got[uid], str)
+
+
+def _drive_interleaved(model, params, sched, prompt, pblocks, keys,
+                       arrivals, budgets):
+    """Submit requests on a fixed arrival schedule and drain the pool."""
+    submitted = {}
+    completions = []
+    while arrivals or sched.has_work:
+        n_new = arrivals.pop(0) if arrivals else 0
+        for _ in range(n_new):
+            i = len(submitted)
+            uid = sched.submit(prompt[i % 4], pblocks[i % 4], keys[i],
+                               max_new_blocks=budgets[i % len(budgets)])
+            submitted[uid] = i
+        completions.extend(sched.step(params))
+        assert sched.stats.ticks < 500
+    return submitted, completions
+
+
+def test_paged_matches_dense_under_churn(setup):
+    """Paged and dense caches are byte-identical — tokens, step maps and
+    denoise counts — for the same per-request rng keys, under
+    mixed-length admission and eviction churn (the acceptance-criterion
+    parity contract).  The paged pool is sized so admissions get
+    deferred mid-run, forcing page reuse across requests."""
+    model, params, prompt, pblocks = setup
+    keys = jax.random.split(jax.random.PRNGKey(13), 10)
+    arrivals = [3, 0, 2, 1, 0, 2, 2]
+    budgets = [3, None, 2, None]        # mixed block budgets
+    outs = {}
+    for cache in ["dense", "paged"]:
+        kw = dict(n_pages=13) if cache == "paged" else {}
+        sched = SlotScheduler(model, n_slots=3, max_len=MAX_LEN, s_max=4,
+                              mode="dynamic", tau=0.6, temperature=1.0,
+                              eos_id=1, cache=cache, **kw)
+        submitted, comps = _drive_interleaved(
+            model, params, sched, prompt, pblocks, keys, list(arrivals),
+            budgets)
+        assert sorted(c.uid for c in comps) == sorted(submitted)
+        outs[cache] = ({c.uid: c for c in comps}, sched.stats)
+    dense, paged = outs["dense"][0], outs["paged"][0]
+    for uid in dense:
+        d, p = dense[uid], paged[uid]
+        assert d.gen_blocks == p.gen_blocks
+        assert d.denoise_steps == p.denoise_steps
+        assert d.gen_tokens == p.gen_tokens
+        hi = (d.prompt_blocks + d.gen_blocks) * BSZ
+        np.testing.assert_array_equal(d.tokens[:hi], p.tokens[:hi])
+        np.testing.assert_array_equal(d.steps[:hi], p.steps[:hi])
+    pstats = outs["paged"][1]
+    assert pstats.deferred > 0          # the tight pool really churned
+    assert pstats.page_allocs == pstats.page_frees > 0
+    assert pstats.peak_pages_in_use <= 12
+
+
+@pytest.mark.parametrize("variant", ["hybrid", "swa"])
+def test_paged_matches_dense_hybrid_and_window(variant):
+    """Paged caching must also hold for per-slot recurrent states
+    (hybrid SSM layers scatter into the slot row while attention layers
+    scatter into pages) and sliding-window layers (dense uses a ring
+    buffer, paged holds all pages and masks by window)."""
+    if variant == "hybrid":
+        cfg = CFG.replace(name="h", arch_type="hybrid", ssm_kind="mamba",
+                          attn_every=2)
+    else:
+        cfg = CFG.replace(name="w", sliding_window=16)
+    model = BlockDiffLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (4, 16), 4, 100))
+    pblocks = np.array([2, 1, 2, 1], np.int32)
+    keys = jax.random.split(jax.random.PRNGKey(6), 6)
+    outs = {}
+    for cache in ["dense", "paged"]:
+        kw = dict(n_pages=13) if cache == "paged" else {}
+        sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
+                              mode="dynamic", tau=0.8, eos_id=1,
+                              cache=cache, **kw)
+        for i in range(6):
+            sched.submit(prompt[i % 4], pblocks[i % 4], keys[i],
+                         max_new_blocks=[2, None, 3][i % 3])
+        outs[cache] = {c.uid: c for c in sched.run(params)}
+    assert sorted(outs["dense"]) == sorted(outs["paged"])
+    for uid, d in outs["dense"].items():
+        p = outs["paged"][uid]
+        assert d.gen_blocks == p.gen_blocks
+        hi = (d.prompt_blocks + d.gen_blocks) * BSZ
+        np.testing.assert_array_equal(d.tokens[:hi], p.tokens[:hi])
+        np.testing.assert_array_equal(d.steps[:hi], p.steps[:hi])
+
+
+def test_paged_out_of_pages_defers_and_recovers(setup):
+    """A pool too small for two concurrent requests defers the second
+    (no crash), admits it once the first eviction frees pages, and both
+    complete with the exact tokens a roomy pool produces."""
+    model, params, prompt, pblocks = setup
+    keys = jax.random.split(jax.random.PRNGKey(4), 2)
+    K = MAX_LEN // BSZ
+
+    def run(n_pages):
+        sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
+                              mode="dynamic", tau=0.9, eos_id=1,
+                              cache="paged", n_pages=n_pages)
+        for i in range(2):
+            sched.submit(prompt[i], pblocks[i], keys[i])
+        comps = {c.uid: c for c in sched.run(params)}
+        return comps, sched
+
+    # each request may need up to K pages -> one at a time
+    tight, sched_t = run(K + 1)
+    roomy, _ = run(2 * K + 1)
+    assert sched_t.stats.deferred > 0
+    assert sched_t.stats.peak_active == 1       # never ran concurrently
+    assert sorted(tight) == sorted(roomy) == [0, 1]
+    for uid in tight:
+        t, r = tight[uid], roomy[uid]
+        assert t.gen_blocks == r.gen_blocks
+        hi = (t.prompt_blocks + t.gen_blocks) * BSZ
+        np.testing.assert_array_equal(t.tokens[:hi], r.tokens[:hi])
+        np.testing.assert_array_equal(t.steps[:hi], r.steps[:hi])
+    # every page returned to the free list
+    assert sched_t.pages_in_use == 0
+
+
+def test_paged_unservable_request_raises(setup):
+    """A request whose worst case exceeds the whole pool can never be
+    admitted: that's a configuration error, not backpressure."""
+    model, params, prompt, pblocks = setup
+    sched = SlotScheduler(model, n_slots=1, max_len=MAX_LEN, s_max=3,
+                          cache="paged", n_pages=3)
+    sched.submit(prompt[0], pblocks[0], jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="pages"):
+        sched.step(params)
+
+
+def test_engine_paged_continuous_matches_static(setup):
+    """The engine's paged-continuous path keeps the generate_ids
+    contract bit-for-bit against the one-shot static path."""
+    model, params, prompt, pblocks = setup
+    rng = jax.random.PRNGKey(17)
+    outs = {}
+    for mode, cache in [("static", "dense"), ("continuous", "paged")]:
+        eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+            max_len=MAX_LEN, s_max=4, mode="dynamic", tau=0.6,
+            temperature=1.0, batching=mode, n_slots=3, cache=cache))
+        outs[mode] = eng.generate_ids(prompt, pblocks, rng)
+        stats = eng.stats
+    a, b = outs["static"], outs["continuous"]
+    for k in ["gen_blocks", "denoise_steps", "done", "prompt_blocks"]:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    for i in range(4):
+        hi = int((pblocks[i] + a["gen_blocks"][i]) * BSZ)
+        np.testing.assert_array_equal(np.asarray(a["tokens"][i, :hi]),
+                                      np.asarray(b["tokens"][i, :hi]))
+        np.testing.assert_array_equal(np.asarray(a["steps"][i, :hi]),
+                                      np.asarray(b["steps"][i, :hi]))
+    assert stats.total_tokens > 0
 
 
 def test_offline_store_gc(tmp_path, setup):

@@ -16,6 +16,9 @@ from repro.serving.engine import GenerationConfig, RolloutEngine
 from repro.serving.server import ModelServer
 from repro.sft.trainer import SFTTrainer
 
+# full two-stage pipeline: minutes on CPU -> slow tier (`pytest -m slow`)
+pytestmark = pytest.mark.slow
+
 CFG = ModelConfig(name="sys", n_layers=2, d_model=128, n_heads=4,
                   n_kv_heads=2, d_ff=256, vocab_size=384, block_size=16,
                   attn_impl="structured")
