@@ -19,6 +19,17 @@ concurrent requests into the same memory (``peak_active``), while dense
 concurrency stays capped at 4 by worst-case-length slot regions.
 Tokens are byte-identical across the two layouts; ``gen_tokens`` counts
 to the first EOS inclusive.
+
+Section 3 (prefix cache on vs off): the DiPO-shaped group-rollout
+workload — N prompts x G=8 trajectories each, the exact shape
+``rl.trainer`` submits — on equal paged pools.  With the shared-prefix
+index on, each group's first member prefills and registers the prompt's
+pages and the other G-1 map them straight into their block tables:
+``prefill_blocks`` drops to ~1/G (the admission-cost saving) and
+``peak_pages_live`` — pages referenced by live slots — drops by nearly
+the duplicated-prompt footprint (the memory saving), with
+``prefix_hit_blocks`` accounting for both.  Tokens are byte-identical
+on vs off (asserted here, pinned in tests/test_prefix_cache.py).
 """
 
 from __future__ import annotations
@@ -107,6 +118,45 @@ def _paged_vs_dense(model, params, toks, blocks, max_len, budget):
     return rows
 
 
+def _group_rollout(model, params, tok, max_len, *, n_prompts, G, budget):
+    """N prompts x G rollouts each (DiPO groups), prefix cache on vs off
+    at equal pool size.  Counter-based (no timing flakiness): prefill
+    steps paid, prompt blocks served from shared pages, and the
+    live-page peak a retention-free pool would need."""
+    cfg = model.cfg
+    toks, blocks = _ragged_workload(tok, cfg.block_size, n_prompts)
+    keys = jax.random.split(jax.random.PRNGKey(5), n_prompts * G)
+    n_slots = 2 * G
+    n_pages = n_slots * (int(blocks.max()) + budget) + 1
+    rows = []
+    ref = None
+    for pc in (False, True):
+        sched = SlotScheduler(
+            model, n_slots=n_slots, max_len=max_len, s_max=4,
+            mode="dynamic", tau=0.7, temperature=1.0, eos_id=1,
+            cache="paged", n_pages=n_pages, prefix_cache=pc)
+        # group members adjacent, exactly as generate_group_ids submits
+        for i in range(n_prompts * G):
+            p = i // G
+            sched.submit(toks[p], int(blocks[p]), keys[i],
+                         max_new_blocks=budget)
+        comps = {c.uid: c for c in sched.run(params)}
+        if ref is None:
+            ref = comps
+        else:  # prefix sharing must not change a single byte
+            for uid, c in ref.items():
+                hi = (c.prompt_blocks + c.gen_blocks) * cfg.block_size
+                np.testing.assert_array_equal(c.tokens[:hi],
+                                              comps[uid].tokens[:hi])
+        s = sched.stats
+        rows.append(
+            f"{'on' if pc else 'off'},{n_prompts},{G},{n_pages - 1},"
+            f"{len(comps)},{s.prefill_blocks},{s.prefix_hit_blocks},"
+            f"{s.shared_pages},{s.peak_pages_live},{s.peak_pages_in_use},"
+            f"{s.ticks},{s.gen_tokens}")
+    return rows
+
+
 def run(quick: bool = True) -> list[str]:
     from .common import bench_config, quick_sft
     cfg = bench_config()
@@ -138,6 +188,13 @@ def run(quick: bool = True) -> list[str]:
                 "peak_pages,deferred")
     budget = 3 if quick else 4          # response cap in blocks
     rows += _paged_vs_dense(model, params, toks, blocks, max_len, budget)
+
+    rows.append("prefix,prompts,G,pool_pages,requests,prefill_blocks,"
+                "hit_blocks,shared_pages,peak_pages_live,peak_pages,"
+                "ticks,gen_tokens")
+    rows += _group_rollout(model, params, tok, max_len,
+                           n_prompts=4 if quick else 8, G=8,
+                           budget=budget)
     return rows
 
 

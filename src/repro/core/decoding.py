@@ -116,6 +116,43 @@ def prefill(model, params, prompt_tokens, prompt_blocks, max_len: int, *,
     return caches
 
 
+def prefill_suffix(model, params, suffix_tokens, start_block: jax.Array,
+                   caches, context_table, write_pages):
+    """Suffix-only prefill: commit prompt blocks [start_block, ...) while
+    reading the shared-prefix KV through ``context_table`` pages.
+
+    The shared-prefix admission path (``serving.prefix_cache``): when the
+    first ``start_block`` blocks of a prompt are already cached, only the
+    suffix needs a committed pass.  ``suffix_tokens`` (B, Ls) with Ls a
+    block multiple; ``context_table`` (B, Kp) page ids of the cached
+    prefix (Kp == start_block, no -1 padding); ``write_pages``
+    (B, Ls // block_size) freshly allocated pages that receive the
+    suffix KV.  Returns the updated (paged) caches.
+
+    Bitwise contract: the combined key array (gathered prefix pages ++
+    suffix self-KV) has exactly the full prompt's key layout, and the
+    chunked attention kernel is row- and length-invariant over it, so
+    the committed suffix KV is *byte-identical* to the same blocks of a
+    full ``prefill`` — the property the scheduler's prefix-cache on/off
+    token-parity guarantee rests on.  Holds when the cache dtype equals
+    the activation dtype (fp32 default); lower-precision caches would
+    round the prefix context where the full pass attends pre-rounding.
+    """
+    cfg = model.cfg
+    B, Ls = suffix_tokens.shape
+    assert Ls % cfg.block_size == 0 and Ls > 0
+    pos = jnp.asarray(start_block, jnp.int32) * cfg.block_size \
+        + jnp.arange(Ls, dtype=jnp.int32)
+    meta = plain_layout(suffix_tokens, jnp.ones((B, Ls), bool),
+                        block_size=cfg.block_size)
+    pos = jnp.broadcast_to(pos, (B, Ls))
+    meta = dataclasses.replace(meta, pos=pos,
+                               block=pos // cfg.block_size)
+    return model.prefill_suffix(params, suffix_tokens, meta, caches,
+                                context_table=context_table,
+                                write_pages=write_pages)
+
+
 def denoise_block(model, params, caches, blk, rng, *,
                   mode: str, tau: float, n_steps: int,
                   temperature: float, s_max: int, table=None,

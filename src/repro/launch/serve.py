@@ -28,6 +28,11 @@ def main():
                     help="KV layout: per-slot regions | shared page pool")
     ap.add_argument("--pages", type=int, default=None,
                     help="paged: pool size (default = dense-equivalent)")
+    ap.add_argument("--prefix-cache", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="paged: share committed prompt pages across "
+                         "requests (default: on when --cache paged and "
+                         "the backbone is pure-attention)")
     args = ap.parse_args()
 
     import jax
@@ -52,7 +57,8 @@ def main():
     engine = RolloutEngine(model, server, GenerationConfig(
         max_len=args.max_len, s_max=args.s_max, mode="dynamic",
         tau=args.tau, batching=args.batching, n_slots=args.slots,
-        cache=args.cache, n_pages=args.pages))
+        cache=args.cache, n_pages=args.pages,
+        prefix_cache=args.prefix_cache))
     rng = random.Random(0)
     prompts = [sample_problem(rng, level=0).prompt
                for _ in range(args.requests)]
@@ -65,6 +71,8 @@ def main():
             f"{s.total_tokens / max(s.wall_seconds, 1e-9):.0f} tok/s")
     if args.batching == "continuous":
         line += f" | slot-util {s.utilization:.0%}"
+        if args.cache == "paged" and engine.scheduler.prefix is not None:
+            line += f" | prefix-hit {s.prefix_hit_rate:.0%}"
     print(line)
 
 

@@ -55,6 +55,15 @@ class PagedAttnCache(NamedTuple):
     are dumped into page 0 — the *null page*, which an allocator must
     never hand out and whose ``pos`` is forced to -1 on every dump so it
     can never leak into attention.
+
+    Pages store rotated keys with *absolute* position ids, so a prompt
+    page is content-addressed: any sequence whose prompt contains the
+    same tokens at the same positions can map the page into its table
+    and read it verbatim (``serving.prefix_cache``).  Shared pages are
+    read-only by construction — a live sequence's commit cursor never
+    re-enters its prompt region, and evicted slots dump their idempotent
+    re-commits into the null page — so sharing needs refcounts but no
+    copy-on-write.
     """
     k: jax.Array    # (P, bsz, Hkv, Dk) rotated
     v: jax.Array    # (P, bsz, Hkv, Dv)
@@ -159,6 +168,71 @@ def write_prompt_pages_grouped(cache: PagedAttnCache, row: AttnCache,
         pos=cache.pos.at[:, pages].set(blocks(row.pos)))
 
 
+def write_suffix_pages(cache: PagedAttnCache, k: jax.Array, v: jax.Array,
+                       positions: jax.Array,
+                       pages: jax.Array) -> PagedAttnCache:
+    """Commit block-aligned suffix K/V into per-row pages.
+
+    k/v (B, T, ...), positions (B, T) with T a block multiple; ``pages``
+    (B, T // bsz) holds each row's freshly allocated page ids (the
+    shared-prefix *suffix* of its prompt).  Unlike ``paged_cache_write``
+    this writes several blocks per row in one shot and has no null-page
+    escape: suffix pages are always freshly allocated.
+    """
+    bsz = cache.k.shape[1]
+    B, T = positions.shape
+    Ks = T // bsz
+
+    def blocks(a):
+        return a.reshape(B, Ks, bsz, *a.shape[2:]).reshape(
+            B * Ks, bsz, *a.shape[2:])
+
+    idx = pages.reshape(-1)
+    return PagedAttnCache(
+        k=cache.k.at[idx].set(blocks(k).astype(cache.k.dtype)),
+        v=cache.v.at[idx].set(blocks(v).astype(cache.v.dtype)),
+        pos=cache.pos.at[idx].set(blocks(positions.astype(jnp.int32))))
+
+
+def wipe_pages(cache: PagedAttnCache, pages: jax.Array, *,
+               grouped: bool) -> PagedAttnCache:
+    """Force ``pos = -1`` on ``pages`` (free-list / reclaim hygiene).
+
+    A page leaving the prefix index or returning to the free list must
+    look empty until its next owner writes it: stale positions could
+    otherwise pass the ``pos < cache_limit`` validity mask of a page
+    that is table-mapped before it is first written.
+    """
+    pos = cache.pos.at[:, pages].set(-1) if grouped \
+        else cache.pos.at[pages].set(-1)
+    return cache._replace(pos=pos)
+
+
+def _paged_context_kv(cache: PagedAttnCache, context_table: jax.Array,
+                      k_self: jax.Array, v_self: jax.Array, meta: SeqMeta,
+                      block_size: int):
+    """(keys, vals, k_meta) = gathered shared-prefix pages ++ suffix self.
+
+    The gather width is exactly the hit prefix (``context_table`` has no
+    -1 padding), so the combined key array reproduces the full-prefill
+    key layout byte-for-byte: prefix keys at [0, Kp*bsz), suffix keys
+    after, no interleaved invalid slots.  That layout equality is what
+    makes the chunked kernel's chunk boundaries — and therefore its
+    bits — match the full plain pass (see core.decoding.prefill_suffix).
+    """
+    ck, cv, cpos = paged_gather(cache, context_table)
+    keys = jnp.concatenate([ck.astype(k_self.dtype), k_self], axis=1)
+    vals = jnp.concatenate([cv.astype(v_self.dtype), v_self], axis=1)
+    cvalid = cpos >= 0
+    cmeta = SeqMeta(copy=jnp.zeros(cpos.shape, jnp.int32),
+                    block=jnp.where(cvalid, cpos // block_size, -1),
+                    step=jnp.zeros(cpos.shape, jnp.int32),
+                    pos=cpos, valid=cvalid)
+    k_meta = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=-1),
+                          cmeta, meta)
+    return keys, vals, k_meta
+
+
 def cache_write(cache: AttnCache, k: jax.Array, v: jax.Array,
                 positions: jax.Array) -> AttnCache:
     """Write a block of (rotated) keys at ``positions`` (B, n).
@@ -223,6 +297,34 @@ def gqa_masked(p, x, meta: SeqMeta, cfg: ModelConfig, *,
         scale=_gqa_scale(cfg), softcap=softcap, window=window,
         strict=strict, dup_len=dup_len, block_size=cfg.block_size)
     return linear(p["wo"], o.reshape(B, T, -1)), k, v
+
+
+def gqa_plain_paged(p, x, meta: SeqMeta, cache: PagedAttnCache,
+                    cfg: ModelConfig, *, window: int | None,
+                    context_table: jax.Array, write_pages: jax.Array
+                    ) -> tuple[jax.Array, PagedAttnCache]:
+    """Plain committed pass over a prompt *suffix* against shared pages.
+
+    ``x``/``meta`` cover only the suffix rows (absolute positions);
+    attention keys are the shared-prefix pages gathered through
+    ``context_table`` followed by the suffix's own K/V — the same key
+    layout, kernel and chunking as the full plain pass, so the computed
+    suffix KV (committed into ``write_pages``) is bitwise identical to
+    what a full prefill would have produced (when the cache dtype equals
+    the activation dtype; see core.decoding.prefill_suffix).
+    """
+    B, T, _ = x.shape
+    q, k, v = gqa_qkv(p, x, meta.pos, cfg)
+    keys, vals, k_meta = _paged_context_kv(cache, context_table, k, v,
+                                           meta, cfg.block_size)
+    o = kops.attention(
+        q, keys, vals, meta, k_meta,
+        impl=cfg.attn_impl,
+        scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
+        window=window, strict=False, dup_len=None,
+        block_size=cfg.block_size)
+    new_cache = write_suffix_pages(cache, k, v, meta.pos, write_pages)
+    return linear(p["wo"], o.reshape(B, T, -1)), new_cache
 
 
 def _cache_decode_attention(q, keys, vals, key_pos, key_valid, q_pos, *,
@@ -379,6 +481,25 @@ def mla_masked(p, x, meta: SeqMeta, cfg: ModelConfig, *,
         scale=_mla_scale(cfg), softcap=None, window=window,
         strict=strict, dup_len=dup_len, block_size=cfg.block_size)
     return _mla_out(p, o, cfg), k, v
+
+
+def mla_plain_paged(p, x, meta: SeqMeta, cache: PagedAttnCache,
+                    cfg: ModelConfig, *, window: int | None,
+                    context_table: jax.Array, write_pages: jax.Array
+                    ) -> tuple[jax.Array, PagedAttnCache]:
+    """``gqa_plain_paged`` for the absorbed-MLA mixer (latent KV pages)."""
+    B, T, _ = x.shape
+    q = _mla_q_latent(p, x, meta.pos, cfg)
+    k, v = _mla_kv_latent(p, x, meta.pos, cfg)
+    keys, vals, k_meta = _paged_context_kv(cache, context_table, k, v,
+                                           meta, cfg.block_size)
+    o = kops.attention(
+        q, keys, vals, meta, k_meta,
+        impl=cfg.attn_impl,
+        scale=_mla_scale(cfg), softcap=None, window=window,
+        strict=False, dup_len=None, block_size=cfg.block_size)
+    new_cache = write_suffix_pages(cache, k, v, meta.pos, write_pages)
+    return _mla_out(p, o, cfg), new_cache
 
 
 def mla_decode(p, x, positions, cache, cfg: ModelConfig, *,

@@ -37,6 +37,11 @@ class LayerCtx:
     block_table: jax.Array | None = None   # (B, K): paged caches only
     write_cache: bool = dataclasses.field(
         default=False, metadata={"static": True})
+    # plain mode over paged caches (shared-prefix suffix prefill): read
+    # the committed prefix through these pages, commit the computed
+    # blocks into ``write_pages``
+    context_table: jax.Array | None = None  # (B, Kp) shared prefix pages
+    write_pages: jax.Array | None = None    # (B, T // block_size)
     # cross attention
     memory: jax.Array | None = None        # (B, Ne, d_model)
     memory_valid: jax.Array | None = None

@@ -145,6 +145,17 @@ def _apply_mixer(cfg: ModelConfig, spec: LayerSpec, lp, h, ctx: LayerCtx,
         decode_fn = attn.mla_decode if cfg.attn_kind == "mla" \
             else attn.gqa_decode
         if ctx.mode in ("dup", "plain"):
+            if ctx.mode == "plain" and \
+                    isinstance(cache, attn.PagedAttnCache):
+                # shared-prefix suffix prefill: committed pass reading
+                # the prefix through pages, committing into fresh pages
+                paged_fn = attn.mla_plain_paged if cfg.attn_kind == "mla" \
+                    else attn.gqa_plain_paged
+                y, new_cache = paged_fn(
+                    lp["attn"], h, ctx.meta, cache, cfg,
+                    window=spec.window, context_table=ctx.context_table,
+                    write_pages=ctx.write_pages)
+                return y, new_cache, None
             y, k, v = masked_fn(lp["attn"], h, ctx.meta, cfg,
                                 window=spec.window, dup_len=ctx.dup_len,
                                 strict=ctx.strict)
@@ -495,6 +506,25 @@ class BlockDiffLM:
         x, new_caches, _, _ = self._run_stack(params, x, ctx, caches)
         logits = self._logits(params, x)
         return logits, new_caches
+
+    def prefill_suffix(self, params, suffix_ids, meta: SeqMeta, caches, *,
+                       context_table, write_pages):
+        """Committed pass over a prompt suffix through paged caches.
+
+        ``suffix_ids`` (B, T) with ``meta`` carrying *absolute*
+        positions; attention layers read the already-committed prefix
+        through ``context_table`` (B, Kp) shared pages and commit the
+        suffix blocks into ``write_pages`` (B, T // block_size).  Skips
+        the logits (prefill only needs caches).  Attention-only stacks:
+        recurrent layers carry per-slot state that pages cannot share
+        (the scheduler gates prefix caching off for them).
+        """
+        ctx = LayerCtx(mode="plain", meta=meta,
+                       context_table=context_table,
+                       write_pages=write_pages)
+        x = self._embed(params, suffix_ids)
+        _, new_caches, _, _ = self._run_stack(params, x, ctx, caches)
+        return new_caches
 
     def make_caches(self, batch: int, cache_len: int, *,
                     ring: bool = True):

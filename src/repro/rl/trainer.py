@@ -80,12 +80,15 @@ class DiPOTrainer:
         G = cfg.group_size
 
         # ---- rollout (G per prompt) ----------------------------------
+        # the group entry keeps each group's members adjacent, so a
+        # paged + prefix-cache engine prefills and stores every unique
+        # prompt once instead of G times (rng layout identical to the
+        # old np.repeat + generate_ids path — rollouts are unchanged)
         t0 = time.perf_counter()
-        toks = np.repeat(prompt_batch.prompt_tokens, G, axis=0)
-        blocks = np.repeat(prompt_batch.prompt_blocks, G, axis=0)
         answers = np.repeat(prompt_batch.answers, G, axis=0)
         rng, kr = jax.random.split(rng)
-        gen = self.engine.generate_ids(toks, blocks, kr)
+        gen = self.engine.generate_group_ids(
+            prompt_batch.prompt_tokens, prompt_batch.prompt_blocks, kr, G)
         t_roll = time.perf_counter() - t0
 
         # ---- rewards ---------------------------------------------------
@@ -118,6 +121,8 @@ class DiPOTrainer:
                   "train_s": t_train, "update_s": t_update}
         if self.engine.last_call.get("batching") == "continuous":
             timing["rollout_util"] = self.engine.last_call["utilization"]
+            timing["prefix_hit_rate"] = \
+                self.engine.last_call["prefix_hit_rate"]
         self.timings.append(timing)
         out = {k: float(v) for k, v in metrics.items()}
         out.update(timing)

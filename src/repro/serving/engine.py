@@ -24,7 +24,13 @@ Contracts kept:
 The continuous path's KV layout is selectable: ``cache="dense"`` (each
 slot owns a ``max_len`` cache region) or ``cache="paged"`` (slots share
 an ``n_pages`` pool of block-sized pages through per-slot block tables —
-see serving.scheduler).  Both produce byte-identical tokens.
+see serving.scheduler).  Paged pools add a third layer,
+``prefix_cache`` (auto-on for pure-attention stacks): a refcounted
+radix index shares committed prompt pages across requests, so DiPO's
+G-rollouts-per-prompt groups (``generate_group_ids``) prefill each
+unique prompt once and hold one copy of its KV.  All layouts produce
+byte-identical tokens; ``EngineStats.prefix_hit_rate`` reports the
+fraction of prompt blocks served from shared pages.
 
 The engine reads weights from a ``ModelServer`` (in-place updates) or
 ``OfflineWeightStore`` (checkpoint baseline) — swapping one for the
@@ -62,6 +68,8 @@ class GenerationConfig:
     n_slots: int = 8             # continuous: decode-slot pool size
     cache: str = "dense"         # continuous: dense | paged KV layout
     n_pages: int | None = None   # paged: pool size (None = dense-equal)
+    prefix_cache: bool | None = None  # paged: share prompt pages across
+    # requests (None = auto: on for pure-attention backbones)
 
 
 @dataclasses.dataclass
@@ -72,6 +80,8 @@ class EngineStats:
     wall_seconds: float = 0.0
     slot_ticks: int = 0           # continuous: paid slot-steps
     active_slot_ticks: int = 0    # continuous: useful slot-steps
+    prefix_hit_blocks: int = 0    # prompt blocks served from shared pages
+    prefix_miss_blocks: int = 0   # prompt blocks that paid a prefill
 
     @property
     def tokens_per_step(self) -> float:
@@ -81,6 +91,12 @@ class EngineStats:
     def utilization(self) -> float:
         """Fraction of paid slot compute that advanced a live request."""
         return self.active_slot_ticks / max(self.slot_ticks, 1)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt blocks served from shared pages."""
+        total = self.prefix_hit_blocks + self.prefix_miss_blocks
+        return self.prefix_hit_blocks / max(total, 1)
 
 
 class RolloutEngine:
@@ -113,7 +129,8 @@ class RolloutEngine:
                 self.model, n_slots=g.n_slots, max_len=g.max_len,
                 s_max=g.s_max, mode=g.mode, tau=g.tau, n_steps=g.n_steps,
                 temperature=g.temperature, eos_id=g.eos_id,
-                cache=g.cache, n_pages=g.n_pages)
+                cache=g.cache, n_pages=g.n_pages,
+                prefix_cache=g.prefix_cache)
         return self._sched
 
     # ------------------------------------------------------------------
@@ -146,6 +163,25 @@ class RolloutEngine:
         self.stats.wall_seconds += dt
         return gen
 
+    def generate_group_ids(self, prompt_tokens: np.ndarray,
+                           prompt_blocks: np.ndarray, rng,
+                           group_size: int) -> dict:
+        """Roll out ``group_size`` trajectories per prompt (DiPO groups).
+
+        Expands (P, Lp) prompts to a (P*G, Lp) batch with each group's G
+        members *adjacent*, then runs ``generate_ids`` — identical rng
+        layout to repeating the prompts by hand, so results are
+        unchanged.  The point of the dedicated entry is the serving
+        side: adjacent identical prompts admit back-to-back, so with
+        ``cache="paged"`` + ``prefix_cache`` the first member registers
+        the prompt's pages and the other G-1 map them straight into
+        their block tables — one prefill and one KV copy per *unique*
+        prompt instead of per request.
+        """
+        toks = np.repeat(np.asarray(prompt_tokens), group_size, axis=0)
+        blocks = np.repeat(np.asarray(prompt_blocks), group_size, axis=0)
+        return self.generate_ids(toks, blocks, rng)
+
     def _generate_ids_continuous(self, params, prompt_tokens,
                                  prompt_blocks, rng) -> dict:
         """Drain a fixed request batch through the slot pool."""
@@ -173,6 +209,8 @@ class RolloutEngine:
         ticks0 = sched.stats.ticks
         slot0, active0 = sched.stats.slot_ticks, \
             sched.stats.active_slot_ticks
+        hit0, miss0 = sched.stats.prefix_hit_blocks, \
+            sched.stats.prefix_miss_blocks
         n_done = 0
         while n_done < B:
             for comp in sched.step(params):
@@ -196,11 +234,16 @@ class RolloutEngine:
         self.stats.slot_ticks += sched.stats.slot_ticks - slot0
         self.stats.active_slot_ticks += \
             sched.stats.active_slot_ticks - active0
+        hit = sched.stats.prefix_hit_blocks - hit0
+        miss = sched.stats.prefix_miss_blocks - miss0
+        self.stats.prefix_hit_blocks += hit
+        self.stats.prefix_miss_blocks += miss
         self.last_call = {
             "batching": "continuous",
             "ticks": sched.stats.ticks - ticks0,
             "utilization": (sched.stats.active_slot_ticks - active0)
             / max(sched.stats.slot_ticks - slot0, 1),
+            "prefix_hit_rate": hit / max(hit + miss, 1),
         }
         return {"tokens": jnp.asarray(tokens), "steps": jnp.asarray(steps),
                 "gen_blocks": jnp.asarray(gen_blocks),
@@ -234,11 +277,17 @@ class RolloutEngine:
                 t0 = time.perf_counter()
                 slot0 = sched.stats.slot_ticks
                 active0 = sched.stats.active_slot_ticks
+                hit0 = sched.stats.prefix_hit_blocks
+                miss0 = sched.stats.prefix_miss_blocks
                 self._pending.extend(sched.step(p))
                 self.stats.wall_seconds += time.perf_counter() - t0
                 self.stats.slot_ticks += sched.stats.slot_ticks - slot0
                 self.stats.active_slot_ticks += \
                     sched.stats.active_slot_ticks - active0
+                self.stats.prefix_hit_blocks += \
+                    sched.stats.prefix_hit_blocks - hit0
+                self.stats.prefix_miss_blocks += \
+                    sched.stats.prefix_miss_blocks - miss0
             # pop-one/yield-one: if the consumer abandons the generator
             # mid-iteration, undelivered completions stay in _pending
             # for the next stream() call

@@ -54,6 +54,37 @@ Cache layouts (``cache=``)
              reserving long-request memory, and slot count decouples
              from ``max_len``.
 
+Shared-prefix layer (``prefix_cache=``, paged only)
+---------------------------------------------------
+The third cache layer (slots -> pages -> *shared* pages): a refcounted
+radix index over committed prompt blocks (``serving.prefix_cache``)
+built for DiPO's G-rollouts-per-prompt groups, where every group member
+would otherwise prefill and store the identical prompt G times.
+
+  * admission — the index is probed for the longest cached prefix; hit
+    blocks map the *existing* pages into the new slot's table
+    (refcount++) and only the suffix is prefilled
+    (``core.decoding.prefill_suffix`` — byte-identical to the same
+    blocks of a full prefill; a full hit skips the model entirely).
+    Freshly prefilled prompt blocks are registered into the index.
+  * eviction — a slot releases its prompt-page references; a page
+    returns to the free list only when *exclusive* (generated blocks,
+    refcount-0 reclaims).  Refcount-0 index entries stay cached for
+    future groups and are reclaimed leaf-first in LRU order under page
+    pressure, so reservation-based admission keeps its no-deadlock
+    guarantee: admission checks ``reserved + live-referenced index
+    pages`` against the pool, and every other page is free or
+    reclaimable.
+  * generated blocks stay private — shared pages are read-only prompt
+    blocks by construction (the commit cursor never re-enters the
+    prompt region), so there is no copy-on-write.
+
+Requires a pure-attention backbone (recurrent layers carry per-slot
+state that pages cannot share); ``prefix_cache=None`` auto-enables
+exactly then.  Byte-for-byte token parity between prefix-cache on/off
+additionally assumes the cache dtype equals the activation dtype (the
+fp32 default) — see ``core.decoding.prefill_suffix``.
+
 Request lifecycle: ``submit() -> queued -> admitted (slot) -> decoding
 -> completed`` — completions stream out of ``step()``/``run()`` in
 finish order, not arrival order.
@@ -66,8 +97,9 @@ cache layout: paged and dense produce byte-identical tokens and step
 maps (tested in tests/test_scheduler.py), so RL rollouts harvested from
 the scheduler remain exactly consumable by the DiPO trajectory replay.
 
-Follow-ups tracked in ROADMAP.md: multi-host pools and batched
-same-width admission.
+Follow-ups tracked in ROADMAP.md: multi-host page pools, batched
+same-width admission, a page-aware attention kernel, and optimistic
+admission + preemption.
 """
 
 from __future__ import annotations
@@ -83,6 +115,7 @@ import numpy as np
 
 from repro.core import decoding
 from repro.models import attention
+from repro.serving.prefix_cache import PrefixIndex, chain_keys
 
 
 @dataclasses.dataclass
@@ -121,16 +154,29 @@ class SchedulerStats:
     gen_tokens: int = 0          # tokens served, cut at first EOS incl.
     denoise_steps: int = 0       # actual denoise steps across requests
     peak_active: int = 0         # max concurrently live slots
+    prefill_blocks: int = 0      # prompt blocks actually prefilled
     # paged cache only
     deferred: int = 0            # admissions deferred for lack of pages
     page_allocs: int = 0
     page_frees: int = 0
-    peak_pages_in_use: int = 0
+    peak_pages_in_use: int = 0   # physical peak (incl. idle cached pages)
+    peak_pages_live: int = 0     # peak pages referenced by live slots
+    # prefix cache only
+    prefix_hit_blocks: int = 0   # prompt blocks served from shared pages
+    prefix_miss_blocks: int = 0  # prompt blocks that paid a prefill
+    shared_pages: int = 0        # peak pages referenced by >= 2 slots
+    prefix_evictions: int = 0    # refcount-0 index entries LRU-reclaimed
 
     @property
     def utilization(self) -> float:
         """Fraction of paid slot-ticks that did useful work."""
         return self.active_slot_ticks / max(self.slot_ticks, 1)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt blocks served from shared pages."""
+        total = self.prefix_hit_blocks + self.prefix_miss_blocks
+        return self.prefix_hit_blocks / max(total, 1)
 
 
 class SlotScheduler:
@@ -140,7 +186,8 @@ class SlotScheduler:
                  s_max: int = 8, mode: str = "dynamic", tau: float = 0.9,
                  n_steps: int = 8, temperature: float = 0.0,
                  eos_id: int = 1, cache: str = "dense",
-                 n_pages: int | None = None):
+                 n_pages: int | None = None,
+                 prefix_cache: bool | None = None):
         cfg = model.cfg
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
@@ -155,6 +202,7 @@ class SlotScheduler:
         self.cache = cache
         self.stats = SchedulerStats()
 
+        self.prefix: PrefixIndex | None = None
         if cache == "paged":
             # default: the same KV footprint a dense pool would reserve,
             # plus the never-allocated null page 0
@@ -166,9 +214,25 @@ class SlotScheduler:
             self._table_host = np.full(
                 (n_slots, self.n_blocks_total), -1, np.int64)
             self._pages_reserved = 0          # worst case of live slots
-            self._slot_limit = [0] * n_slots
+            self._slot_resv = [0] * n_slots   # per-slot reserved pages
+            self._slot_limit = [0] * n_slots  # per-slot block-cursor cap
             self._slot_blk = [0] * n_slots    # host mirror of state.blk
+            # shared-prefix index: auto-on for pure-attention stacks
+            # (recurrent layers carry per-slot state pages cannot share)
+            if prefix_cache is None:
+                prefix_cache = not cfg.ssm_kind
+            if prefix_cache:
+                if cfg.ssm_kind:
+                    raise ValueError(
+                        "prefix_cache requires a pure-attention backbone "
+                        f"(got ssm_kind={cfg.ssm_kind!r}: recurrent "
+                        "boundary states are per-slot, not per-page)")
+                self.prefix = PrefixIndex()
+            self._slot_nodes: list[list[bytes]] = \
+                [[] for _ in range(n_slots)]
         else:
+            if prefix_cache:
+                raise ValueError("prefix_cache requires cache='paged'")
             self.n_pages = 0
 
         self._queue: deque[Request] = deque()
@@ -186,6 +250,10 @@ class SlotScheduler:
             n_steps=n_steps, temperature=temperature, s_max=s_max,
             eos_id=eos_id), donate_argnums=(1,))
         self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(1,))
+        self._admit_hit_jit = jax.jit(self._admit_hit_impl,
+                                      donate_argnums=(0,))
+        self._admit_suffix_jit = jax.jit(self._admit_suffix_impl,
+                                         donate_argnums=(1,))
 
     # ----------------------------------------------------------- state
     @property
@@ -195,8 +263,20 @@ class SlotScheduler:
 
     @property
     def pages_in_use(self) -> int:
+        """Pages off the free list (live-referenced + idle cached)."""
         return self.n_usable_pages - len(self._free_pages) \
             if self.cache == "paged" else 0
+
+    @property
+    def pages_live(self) -> int:
+        """Pages referenced by live slots (excludes idle cached pages).
+
+        This is the memory a pool *without* prefix retention would need
+        at the same instant — the apples-to-apples peak for the
+        prefix-cache on/off benchmark.
+        """
+        idle = self.prefix.n_idle if self.prefix is not None else 0
+        return self.pages_in_use - idle
 
     def _init_pool(self) -> decoding.GenState:
         cfg = self.model.cfg
@@ -238,6 +318,26 @@ class SlotScheduler:
                                 pool, new)
         return jax.tree.map(lambda p, n: p.at[slot].set(n[0]), pool, new)
 
+    @staticmethod
+    def _scatter_slot(st: decoding.GenState, slot, row, key, limit, blk,
+                      caches, table) -> decoding.GenState:
+        """Write one admitted request's per-slot state into the pool.
+
+        Every admission path (cold prefill, full prefix hit, suffix
+        prefill) funnels through this single GenState constructor, so a
+        new per-sequence field only needs threading once.
+        """
+        return decoding.GenState(
+            tokens=st.tokens.at[slot].set(row),
+            steps=st.steps.at[slot].set(0),
+            caches=caches,
+            blk=st.blk.at[slot].set(blk),
+            done=st.done.at[slot].set(False),
+            rng=st.rng.at[slot].set(key),
+            limit=st.limit.at[slot].set(limit),
+            n_denoise=st.n_denoise.at[slot].set(0),
+            table=table)
+
     def _admit_impl(self, params, st: decoding.GenState, slot,
                     prompt, pblocks, key, limit,
                     pages=None) -> decoding.GenState:
@@ -269,16 +369,131 @@ class SlotScheduler:
         table = st.table
         if paged:
             table = table.at[slot, :pages.shape[0]].set(pages)
-        return decoding.GenState(
-            tokens=st.tokens.at[slot].set(row),
-            steps=st.steps.at[slot].set(0),
-            caches=caches,
-            blk=st.blk.at[slot].set(pblocks[0]),
-            done=st.done.at[slot].set(False),
-            rng=st.rng.at[slot].set(key),
-            limit=st.limit.at[slot].set(limit),
-            n_denoise=st.n_denoise.at[slot].set(0),
-            table=table)
+        return self._scatter_slot(st, slot, row, key, limit, pblocks[0],
+                                  caches, table)
+
+    def _admit_hit_impl(self, st: decoding.GenState, slot, row, key,
+                        limit, table_row, pblocks) -> decoding.GenState:
+        """Admit a full prefix-cache hit: every prompt block is already
+        committed in shared pages, so no model call happens at all —
+        just scatter the slot's tokens / cursor / rng / block table.
+        Compiles once (all shapes are pool-static).
+        """
+        return self._scatter_slot(st, slot, row, key, limit, pblocks,
+                                  st.caches,
+                                  st.table.at[slot].set(table_row))
+
+    def _admit_suffix_impl(self, params, st: decoding.GenState, slot,
+                           suffix, row, key, limit, ctx_pages, sfx_pages,
+                           table_row) -> decoding.GenState:
+        """Admit a partial prefix-cache hit: prefill only the suffix.
+
+        ``suffix`` (1, Ls) are the prompt blocks beyond the hit;
+        ``ctx_pages`` (h,) the shared pages of the hit prefix;
+        ``sfx_pages`` (Ls // bsz,) fresh pages receiving the suffix KV.
+        The committed pass reads the prefix through the shared pages
+        (``decoding.prefill_suffix``), so the hit blocks are never
+        re-prefilled.  Compiles per (hit, suffix) block-count pair.
+        """
+        bsz = self.model.cfg.block_size
+        h = ctx_pages.shape[0]
+        pblocks = h + suffix.shape[1] // bsz
+        caches = decoding.prefill_suffix(
+            self.model, params, suffix, jnp.int32(h), st.caches,
+            context_table=ctx_pages[None], write_pages=sfx_pages[None])
+        return self._scatter_slot(st, slot, row, key, limit, pblocks,
+                                  caches,
+                                  st.table.at[slot].set(table_row))
+
+    def _admit_paged(self, params, slot: int, req: Request,
+                     budget: int) -> bool:
+        """Admit one request into ``slot`` under the paged allocator.
+
+        Returns False (defer, nothing mutated) when the worst case does
+        not fit.  With the prefix index enabled, the feasibility check
+        covers the slot's *private* worst case (its generation budget)
+        plus the index pages its admission turns live — hit blocks map
+        shared pages in (refcount++), and only the suffix is prefilled.
+        """
+        cfg = self.model.cfg
+        bsz = cfg.block_size
+        pb = req.prompt_blocks
+        limit = pb + budget
+        if self.prefix is None:
+            if self._pages_reserved + limit > self.n_usable_pages:
+                return False
+            pages = self._take_pages(pb)
+            self._table_host[slot, :pb] = pages
+            self._pages_reserved += limit
+            self._slot_resv[slot] = limit
+            self._slot_limit[slot] = limit
+            self._slot_blk[slot] = pb
+            self.stats.page_allocs += pb
+            self.stats.prefill_blocks += pb
+            self._state = self._admit_jit(
+                params, self._state, jnp.int32(slot), req.prompt[None],
+                jnp.asarray([pb], jnp.int32), req.rng, jnp.int32(limit),
+                jnp.asarray(pages, jnp.int32))
+            return True
+
+        keys = chain_keys(req.prompt, bsz)
+        hits = self.prefix.match(keys)
+        h = len(hits)
+        idle_hits = sum(1 for e in hits if e.refs == 0)
+        # invariant kept <= n_usable: live slots' private worst cases
+        # (_pages_reserved) + live-referenced index pages (n_active);
+        # everything outside it is free or reclaimable, so mid-flight
+        # cursor allocation can never fail
+        if self._pages_reserved + self.prefix.n_active + budget \
+                + (pb - h) + idle_hits > self.n_usable_pages:
+            return False
+        # acquire before allocating: _take_pages may LRU-reclaim idle
+        # entries, and an unreferenced hit would be fair game
+        self.prefix.acquire(hits)
+        new_pages = self._take_pages(pb - h)
+        hit_pages = [e.page for e in hits]
+        node_keys = [e.key for e in hits]
+        node_keys += self.prefix.register(keys, h, new_pages)
+        self._slot_nodes[slot] = node_keys
+        self._table_host[slot, :pb] = hit_pages + new_pages
+        self._pages_reserved += budget
+        self._slot_resv[slot] = budget
+        self._slot_limit[slot] = limit
+        self._slot_blk[slot] = pb
+        self.stats.page_allocs += len(new_pages)
+        self.stats.prefix_hit_blocks += h
+        self.stats.prefix_miss_blocks += pb - h
+        self.stats.prefill_blocks += pb - h
+        self.stats.shared_pages = max(self.stats.shared_pages,
+                                      self.prefix.n_shared)
+        self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
+                                           self.pages_in_use)
+        self.stats.peak_pages_live = max(self.stats.peak_pages_live,
+                                         self.pages_live)
+
+        table_row = jnp.asarray(self._table_host[slot], jnp.int32)
+        if h == 0:
+            # cold prompt: the PR-2 path — one B=1 plain prefill,
+            # scattered into the fresh pages (then registered above)
+            self._state = self._admit_jit(
+                params, self._state, jnp.int32(slot), req.prompt[None],
+                jnp.asarray([pb], jnp.int32), req.rng, jnp.int32(limit),
+                jnp.asarray(new_pages, jnp.int32))
+            return True
+        row = np.full((self.max_len,), cfg.resolved_mask_token, np.int32)
+        row[:pb * bsz] = req.prompt
+        if h == pb:
+            # full hit (the DiPO G-group case): zero prefill
+            self._state = self._admit_hit_jit(
+                self._state, jnp.int32(slot), jnp.asarray(row), req.rng,
+                jnp.int32(limit), table_row, jnp.int32(pb))
+        else:
+            self._state = self._admit_suffix_jit(
+                params, self._state, jnp.int32(slot),
+                req.prompt[None, h * bsz:], jnp.asarray(row), req.rng,
+                jnp.int32(limit), jnp.asarray(hit_pages, jnp.int32),
+                jnp.asarray(new_pages, jnp.int32), table_row)
+        return True
 
     def _empty_completion(self, req: Request) -> Completion:
         """Zero-budget request: completes without ever touching a slot.
@@ -342,12 +557,40 @@ class SlotScheduler:
         return sum(r is not None for r in self._slot_req)
 
     # ------------------------------------------------- paged allocator
+    def _take_pages(self, n: int) -> list[int]:
+        """Pop ``n`` pages: free list first, then LRU prefix reclaims.
+
+        Reclaimed pages held cached prompt KV of idle (refcount-0) index
+        entries; their ``pos`` is wiped before reuse so the stale keys
+        can never pass a later owner's ``cache_limit`` mask.  Guaranteed
+        to succeed by the admission invariant: reserved worst cases plus
+        live-referenced index pages never exceed the pool, so everything
+        else is free or reclaimable.
+        """
+        out, reclaimed = [], []
+        for _ in range(n):
+            if self._free_pages:
+                out.append(self._free_pages.pop())
+                continue
+            page = self.prefix.evict_lru() if self.prefix is not None \
+                else None
+            if page is None:
+                raise RuntimeError(
+                    "page pool exhausted — reservation invariant broken")
+            reclaimed.append(page)
+            out.append(page)
+        if reclaimed:
+            self.stats.prefix_evictions += len(reclaimed)
+            self._invalidate_pages(reclaimed)
+        return out
+
     def _alloc_cursor_pages(self) -> None:
         """Give every live slot a page for the block it commits next.
 
         Cannot fail: admission reserved each request's worst case, and a
         live slot's cursor is always below its limit, so at least one
-        reserved-but-unallocated page remains for it.
+        reserved-but-unallocated page remains for it (reclaiming idle
+        prefix-cache pages if the free list is dry).
         """
         slots, blks, pages = [], [], []
         for slot, req in enumerate(self._slot_req):
@@ -355,7 +598,7 @@ class SlotScheduler:
                 continue
             b = self._slot_blk[slot]
             if self._table_host[slot, b] < 0:
-                pg = self._free_pages.pop()
+                pg = self._take_pages(1)[0]
                 self._table_host[slot, b] = pg
                 slots.append(slot)
                 blks.append(b)
@@ -369,14 +612,31 @@ class SlotScheduler:
         self.stats.page_allocs += len(slots)
         self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
                                            self.pages_in_use)
+        self.stats.peak_pages_live = max(self.stats.peak_pages_live,
+                                         self.pages_live)
 
     def _free_slot_pages(self, slot: int) -> list[int]:
+        """Release a slot's pages; returns the *exclusive* pages freed.
+
+        Prompt pages registered in the prefix index are not freed — the
+        slot just drops its references and the entries stay cached
+        (reclaimed later under pressure).  Generated-block pages are
+        always exclusive and return to the free list.
+        """
         row = self._table_host[slot]
         pages = [int(p) for p in row[row >= 0]]
+        nodes = self._slot_nodes[slot]
+        if nodes:
+            # row is block-ordered: the first len(nodes) mapped pages
+            # are the registered prompt blocks, the rest generation
+            self.prefix.release(nodes)
+            self._slot_nodes[slot] = []
+            pages = pages[len(nodes):]
         self._free_pages.extend(pages)
         self.stats.page_frees += len(pages)
         row[:] = -1
-        self._pages_reserved -= self._slot_limit[slot]
+        self._pages_reserved -= self._slot_resv[slot]
+        self._slot_resv[slot] = 0
         self._slot_limit[slot] = 0
         return pages
 
@@ -386,16 +646,17 @@ class SlotScheduler:
         A reused page must look empty until its new owner writes it —
         stale positions from the previous request could otherwise pass
         the ``pos < cache_limit`` validity mask of a cursor page that is
-        allocated (for the commit) before it is first written.
+        allocated (for the commit) before it is first written.  Applies
+        equally to prefix-cache reclaims: a reclaimed page held valid
+        cached keys by design, which become stale the moment the entry
+        leaves the index.
         """
         idx = jnp.asarray(pages, jnp.int32)
 
         def wipe(c, grouped):
             if not isinstance(c, attention.PagedAttnCache):
                 return c
-            pos = c.pos.at[:, idx].set(-1) if grouped \
-                else c.pos.at[idx].set(-1)
-            return c._replace(pos=pos)
+            return attention.wipe_pages(c, idx, grouped=grouped)
 
         caches = self._state.caches
         caches = {
@@ -433,26 +694,19 @@ class SlotScheduler:
                     raise ValueError(
                         f"request {req.uid} needs {limit} pages but the "
                         f"pool only has {self.n_usable_pages}")
-                if self._pages_reserved + limit > self.n_usable_pages:
+                if not self._admit_paged(params, slot, req, budget):
                     # out of pages: defer the FIFO head until evictions
                     # free some (backpressure, never a crash)
                     self.stats.deferred += 1
                     break
+            else:
+                self.stats.prefill_blocks += req.prompt_blocks
+                self._state = self._admit_jit(
+                    params, self._state, jnp.int32(slot),
+                    req.prompt[None],
+                    jnp.asarray([req.prompt_blocks], jnp.int32),
+                    req.rng, jnp.int32(limit), None)
             self._queue.popleft()
-            pages = None
-            if self.cache == "paged":
-                pages = [self._free_pages.pop()
-                         for _ in range(req.prompt_blocks)]
-                self._table_host[slot, :req.prompt_blocks] = pages
-                self._pages_reserved += limit
-                self._slot_limit[slot] = limit
-                self._slot_blk[slot] = req.prompt_blocks
-                self.stats.page_allocs += len(pages)
-                pages = jnp.asarray(pages, jnp.int32)
-            self._state = self._admit_jit(
-                params, self._state, jnp.int32(slot), req.prompt[None],
-                jnp.asarray([req.prompt_blocks], jnp.int32), req.rng,
-                jnp.int32(limit), pages)
             self._slot_req[slot] = req
             self._slot_admit_tick[slot] = self.stats.ticks
             self.stats.admitted += 1
@@ -515,11 +769,15 @@ class SlotScheduler:
         if evicted and self.cache == "paged":
             # reset the device table rows so the freed slots' idempotent
             # re-commits dump into the null page, not into pages that
-            # may be re-allocated to other requests
+            # may be re-allocated to other requests (shared prompt pages
+            # stay mapped in the *surviving* sharers' rows untouched)
             table = self._state.table.at[
                 jnp.asarray(evicted, jnp.int32)].set(-1)
             self._state = dataclasses.replace(self._state, table=table)
-            self._invalidate_pages(freed_pages)
+            if freed_pages:
+                # exclusive pages only: wiping a still-shared page would
+                # blind the survivors to their own prompt
+                self._invalidate_pages(freed_pages)
         return out
 
     def run(self, params) -> Iterator[Completion]:

@@ -1,0 +1,302 @@
+"""Shared-prefix KV cache: refcounted page sharing across group rollouts.
+
+Pins the third serving-cache layer (slots -> pages -> shared pages):
+admission-time sharing across a DiPO G-group, the refcount lifecycle
+(pages return to the free list only at refcount 0), LRU reclamation of
+idle index entries under page pressure (never a live page), stale-key
+hygiene on reclaimed pages, and — the acceptance criterion — byte-exact
+token parity between prefix_cache on / off / dense under churn.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import BlockDiffLM
+from repro.serving.engine import GenerationConfig, RolloutEngine
+from repro.serving.prefix_cache import PrefixIndex, chain_keys
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.server import ModelServer
+
+CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=128, block_size=8,
+                  attn_impl="structured")
+BSZ = CFG.block_size
+MAX_LEN = 48
+K = MAX_LEN // BSZ
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = BlockDiffLM(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts():
+    """Four 2-block prompts: 0 and 1 share block 0 (partial-prefix pair),
+    2 and 3 are unrelated."""
+    k = jax.random.PRNGKey(1)
+    shared = np.asarray(jax.random.randint(k, (BSZ,), 4, 100), np.int32)
+    tails = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (4, BSZ), 4, 100), np.int32)
+    p0 = np.concatenate([shared, tails[0]])
+    p1 = np.concatenate([shared, tails[1]])
+    p2 = np.concatenate([tails[2], tails[3]])
+    p3 = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (2 * BSZ,), 4, 100), np.int32)
+    return [p0, p1, p2, p3]
+
+
+def _run_sched(model, params, submissions, **kw):
+    """Drain a request list [(prompt, pblocks, key, budget)] and return
+    ({uid: completion}, scheduler)."""
+    sched = SlotScheduler(model, n_slots=kw.pop("n_slots", 3),
+                          max_len=MAX_LEN, s_max=3, mode="dynamic",
+                          tau=0.7, temperature=1.0, eos_id=1, **kw)
+    for prompt, pb, key, budget in submissions:
+        sched.submit(prompt, pb, key, max_new_blocks=budget)
+    comps = {c.uid: c for c in sched.run(params)}
+    return comps, sched
+
+
+def _assert_identical(a, b):
+    assert sorted(a) == sorted(b)
+    for uid in a:
+        ca, cb = a[uid], b[uid]
+        assert ca.gen_blocks == cb.gen_blocks
+        assert ca.denoise_steps == cb.denoise_steps
+        hi = (ca.prompt_blocks + ca.gen_blocks) * BSZ
+        np.testing.assert_array_equal(ca.tokens[:hi], cb.tokens[:hi])
+        np.testing.assert_array_equal(ca.steps[:hi], cb.steps[:hi])
+
+
+# ---------------------------------------------------------------- index
+def test_index_longest_match_and_chaining():
+    """Chained keys commit to the absolute prefix: equal blocks at
+    different depths get different keys, and match() returns the longest
+    contiguous cached chain."""
+    idx = PrefixIndex()
+    p = np.arange(3 * BSZ, dtype=np.int32)
+    keys = chain_keys(p, BSZ)
+    assert len(keys) == 3 and len(set(keys)) == 3
+    # same block content, different prefix -> different key
+    q = np.concatenate([p[BSZ:2 * BSZ], p[BSZ:2 * BSZ]])
+    qkeys = chain_keys(q, BSZ)
+    assert qkeys[0] != keys[1]
+    idx.register(keys, 0, [5, 6, 7])
+    assert [e.page for e in idx.match(keys)] == [5, 6, 7]
+    assert [e.page for e in idx.match(keys[:2])] == [5, 6]
+    assert idx.match(qkeys) == []
+    # a hole can never match past it
+    longer = chain_keys(np.arange(4 * BSZ, dtype=np.int32), BSZ)
+    assert [e.page for e in idx.match(longer)] == [5, 6, 7]
+
+
+def test_index_refcounts_and_leaf_first_lru():
+    """Live-referenced entries are never reclaimed; idle ones go
+    leaf-first in LRU order so the trie never dangles."""
+    idx = PrefixIndex()
+    a = chain_keys(np.arange(2 * BSZ, dtype=np.int32), BSZ)
+    b = chain_keys(np.arange(2 * BSZ, dtype=np.int32) + 1, BSZ)
+    idx.register(a, 0, [1, 2])       # refs 1 each
+    idx.register(b, 0, [3, 4])
+    idx.release(b)                    # b idle, a live
+    assert idx.n_active == 2 and idx.n_idle == 2
+    # only b is reclaimable, leaf (deeper entry) first
+    assert idx.evict_lru() == 4
+    assert idx.evict_lru() == 3
+    assert idx.evict_lru() is None    # a is live: never evicted
+    idx.release(a)
+    assert idx.evict_lru() == 2       # leaf-first again
+    idx2 = PrefixIndex()
+    idx2.register(a, 0, [1, 2])
+    idx2.release(a)
+    hit = idx2.match(a)
+    idx2.acquire(hit)                 # re-acquired idle entries are live
+    assert idx2.evict_lru() is None
+
+
+# ------------------------------------------------------- group sharing
+def test_group_admission_shares_pages(setup):
+    """A G-group of identical prompts prefills once: G-1 admissions are
+    full hits mapping the same pages, and tokens are byte-identical to
+    the dense layout."""
+    model, params = setup
+    G = 4
+    prompt = _prompts()[2]
+    keys = jax.random.split(jax.random.PRNGKey(7), G)
+    subs = [(prompt, 2, keys[i], 2) for i in range(G)]
+    got, sched = _run_sched(model, params, subs, n_slots=G,
+                            cache="paged")
+    ref, _ = _run_sched(model, params, subs, n_slots=G, cache="dense")
+    _assert_identical(got, ref)
+    s = sched.stats
+    assert s.prefix_miss_blocks == 2            # one prefill per prompt
+    assert s.prefix_hit_blocks == (G - 1) * 2   # every other member hits
+    assert s.prefill_blocks == 2
+    assert s.shared_pages == 2                  # both prompt pages shared
+    # pool footprint: 2 shared prompt pages + G private gen regions,
+    # instead of G * 2 prompt pages
+    assert s.peak_pages_live <= 2 + G * 2
+    # after drain the prompt pages stay cached (idle), nothing live
+    assert sched.prefix.n_idle == 2 and sched.prefix.n_active == 0
+    assert sched.pages_live == 0 and sched.pages_in_use == 2
+
+
+def test_sharer_eviction_keeps_survivors_byte_identical(setup):
+    """Evicting one sharer decrements refcounts; survivors keep reading
+    the shared pages and finish byte-identical to dense.  The shared
+    page returns to the free list only at refcount 0 — and with
+    retention, not even then (it waits for LRU pressure)."""
+    model, params = setup
+    prompt = _prompts()[3]
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    budgets = [1, 3, 3]      # member 0 finishes (and evicts) first
+    subs = [(prompt, 2, keys[i], budgets[i]) for i in range(3)]
+
+    sched = SlotScheduler(model, n_slots=3, max_len=MAX_LEN, s_max=3,
+                          mode="dynamic", tau=0.7, temperature=1.0,
+                          eos_id=1, cache="paged")
+    for p, pb, k, b in subs:
+        sched.submit(p, pb, k, max_new_blocks=b)
+    shared_page = None
+    comps = {}
+    while sched.has_work:
+        for c in sched.step(params):
+            comps[c.uid] = c
+        if shared_page is None and sched.prefix is not None \
+                and len(sched.prefix) > 0:
+            shared_page = sched.prefix.entry(
+                chain_keys(prompt[:2 * BSZ], BSZ)[0]).page
+        if sched.n_active > 0:
+            # while any sharer lives the page must never be freed
+            assert shared_page not in sched._free_pages
+    assert len(comps) == 3
+    # refcount 0 now, but retention keeps the page cached (not free)
+    assert shared_page not in sched._free_pages
+    assert sched.prefix.entry(
+        chain_keys(prompt[:2 * BSZ], BSZ)[0]).refs == 0
+    ref, _ = _run_sched(model, params, subs, n_slots=3, cache="dense")
+    _assert_identical(comps, ref)
+
+
+# --------------------------------------------- pressure / LRU / reuse
+def test_lru_reclaim_under_pressure_and_stale_key_hygiene(setup):
+    """A tight pool forces LRU reclamation of idle cached pages (extends
+    the PR-2 pos-wipe test: a reclaimed page is reused by a *different*
+    prompt and must not leak its old keys), and a later partial hit on
+    the surviving entry exercises the suffix-only prefill — all
+    byte-identical to dense."""
+    model, params = setup
+    p0, p1, p2, p3 = _prompts()
+    keys = jax.random.split(jax.random.PRNGKey(11), 4)
+    # usable pages = 5; each request worst-cases 2 prompt + 2 gen
+    subs = [(p3, 2, keys[0], 2), (p2, 2, keys[1], 2),
+            (p0, 2, keys[2], 2), (p1, 2, keys[3], 2)]
+    got, sched = _run_sched(model, params, subs, n_slots=1,
+                            cache="paged", n_pages=6)
+    ref, _ = _run_sched(model, params, subs, n_slots=1, cache="dense")
+    _assert_identical(got, ref)
+    s = sched.stats
+    # the 5-page pool cannot retain three 2-block prompts + 2 gen pages:
+    # idle entries were reclaimed (and their pos wiped before reuse)
+    assert s.prefix_evictions > 0
+    assert sched.prefix.n_active == 0
+    # p1 arrived after p0 and shares only block 0: if that entry
+    # survived the pressure it was a partial (suffix-prefill) hit
+    assert s.prefix_hit_blocks >= 1
+    # invariant at drain: nothing live, free + idle covers the pool
+    assert sched.pages_live == 0
+    assert len(sched._free_pages) + sched.prefix.n_idle \
+        == sched.n_usable_pages
+
+
+def test_pressure_defers_instead_of_evicting_live_pages(setup):
+    """When the pool cannot cover a new request on top of *live*
+    references, admission defers — the LRU can only reclaim refcount-0
+    entries, so a live slot's pages are untouchable."""
+    model, params = setup
+    p2, p3 = _prompts()[2], _prompts()[3]
+    keys = jax.random.split(jax.random.PRNGKey(13), 2)
+    sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
+                          mode="dynamic", tau=0.7, temperature=1.0,
+                          eos_id=1, cache="paged", n_pages=7)
+    # usable 6: first request worst-cases 2+2, second cannot fit 4 more
+    sched.submit(p2, 2, keys[0], max_new_blocks=2)
+    sched.submit(p3, 2, keys[1], max_new_blocks=2)
+    comps = {}
+    while sched.has_work:
+        for c in sched.step(params):
+            comps[c.uid] = c
+        if sched.stats.deferred and sched.n_active:
+            # the live request's entries must still be referenced
+            assert sched.prefix.n_active == 2
+    assert sched.stats.deferred > 0
+    assert len(comps) == 2
+    subs = [(p2, 2, keys[0], 2), (p3, 2, keys[1], 2)]
+    ref, _ = _run_sched(model, params, subs, n_slots=2, cache="dense")
+    _assert_identical(comps, ref)
+
+
+# -------------------------------------------------- parity (criterion)
+def test_token_parity_on_off_dense_under_group_churn(setup):
+    """Acceptance criterion: same rng => byte-identical tokens and step
+    maps across prefix_cache on / off / dense, under mixed-length
+    admission + eviction churn including a G-group and partial-prefix
+    overlaps, on a pool tight enough to defer and reclaim."""
+    model, params = setup
+    p0, p1, p2, p3 = _prompts()
+    G = 4
+    keys = jax.random.split(jax.random.PRNGKey(17), G + 5)
+    subs = [(p2, 2, keys[i], [2, None, 3][i % 3]) for i in range(G)]
+    subs += [(p0, 2, keys[G], 2), (p1, 2, keys[G + 1], None),
+             (p3, 2, keys[G + 2], 1), (p0, 1, keys[G + 3], 2),
+             (p2, 2, keys[G + 4], 2)]
+    runs = {}
+    for name, kw in [("dense", dict(cache="dense")),
+                     ("off", dict(cache="paged", n_pages=13,
+                                  prefix_cache=False)),
+                     ("on", dict(cache="paged", n_pages=13,
+                                 prefix_cache=True))]:
+        runs[name], sched = _run_sched(model, params, list(subs),
+                                       n_slots=3, **kw)
+        if name == "on":
+            s = sched.stats
+            assert s.prefix_hit_blocks > 0
+            assert s.prefill_blocks \
+                == sum(pb for _, pb, _, _ in subs) - s.prefix_hit_blocks
+    _assert_identical(runs["dense"], runs["off"])
+    _assert_identical(runs["dense"], runs["on"])
+
+
+def test_engine_group_rollout_prefix_stats(setup):
+    """generate_group_ids through a paged+prefix engine matches the
+    static path bit-for-bit and reports the G-group hit rate."""
+    model, params = setup
+    P, G = 2, 3
+    prompts = np.stack([_prompts()[2], _prompts()[3]])
+    pblocks = np.array([2, 2], np.int32)
+    rng = jax.random.PRNGKey(23)
+    static = RolloutEngine(model, ModelServer(params), GenerationConfig(
+        max_len=MAX_LEN, s_max=3, mode="dynamic", tau=0.7,
+        temperature=1.0, batching="static"))
+    a = static.generate_group_ids(prompts, pblocks, rng, G)
+    cont = RolloutEngine(model, ModelServer(params), GenerationConfig(
+        max_len=MAX_LEN, s_max=3, mode="dynamic", tau=0.7,
+        temperature=1.0, batching="continuous", n_slots=3,
+        cache="paged"))
+    b = cont.generate_group_ids(prompts, pblocks, rng, G)
+    for k in ["gen_blocks", "denoise_steps", "done", "prompt_blocks"]:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    for i in range(P * G):
+        hi = int((a["prompt_blocks"][i] + a["gen_blocks"][i]) * BSZ)
+        np.testing.assert_array_equal(np.asarray(a["tokens"][i, :hi]),
+                                      np.asarray(b["tokens"][i, :hi]))
+    # each group's first member misses, the other G-1 hit
+    assert cont.stats.prefix_miss_blocks == int(pblocks.sum())
+    assert cont.stats.prefix_hit_blocks == (G - 1) * int(pblocks.sum())
+    assert cont.stats.prefix_hit_rate == pytest.approx((G - 1) / G)
+    assert cont.last_call["prefix_hit_rate"] == pytest.approx(
+        (G - 1) / G)

@@ -255,7 +255,11 @@ def test_paged_matches_dense_under_churn(setup):
     budgets = [3, None, 2, None]        # mixed block budgets
     outs = {}
     for cache in ["dense", "paged"]:
-        kw = dict(n_pages=13) if cache == "paged" else {}
+        # prefix_cache=False: this test pins the PR-2 exclusive-page
+        # allocator lifecycle (allocs == frees, no retention);
+        # tests/test_prefix_cache.py covers the shared-page variant
+        kw = dict(n_pages=13, prefix_cache=False) \
+            if cache == "paged" else {}
         sched = SlotScheduler(model, n_slots=3, max_len=MAX_LEN, s_max=4,
                               mode="dynamic", tau=0.6, temperature=1.0,
                               eos_id=1, cache=cache, **kw)
@@ -324,9 +328,14 @@ def test_paged_out_of_pages_defers_and_recovers(setup):
     K = MAX_LEN // BSZ
 
     def run(n_pages):
+        # prefix_cache=False: asserts every page returns to the free
+        # list at drain, which retention deliberately violates (idle
+        # cached pages); the prefix-on deferral/recovery behaviour is
+        # covered in tests/test_prefix_cache.py
         sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
                               mode="dynamic", tau=0.9, eos_id=1,
-                              cache="paged", n_pages=n_pages)
+                              cache="paged", n_pages=n_pages,
+                              prefix_cache=False)
         for i in range(2):
             sched.submit(prompt[i], pblocks[i], keys[i])
         comps = {c.uid: c for c in sched.run(params)}
