@@ -14,7 +14,8 @@ from repro import configs
 from repro.checkpoint.io import load_pytree
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import BlockDiffLM
-from repro.serving.engine import GenerationConfig, RolloutEngine
+from repro.serving.engine import (GenerationConfig, RolloutEngine,
+                                  SamplingParams)
 from repro.serving.server import ModelServer
 
 
@@ -36,17 +37,28 @@ def main():
         batching="continuous", n_slots=2))
 
     # streaming path: submit onto the live slot pool, harvest in finish
-    # order (a 2-slot pool serving 4 requests exercises admission)
+    # order (a 2-slot pool serving 4 requests exercises admission).
+    # Each request carries its OWN SamplingParams — mixed τ and budgets
+    # share the pool with zero retraces
     requests = ["Q: 12+7=?\nA:", "Q: 30-4=?\nA:", "Q: 5*6=?\nA:",
                 "Q: 9+9=?\nA:"]
     keys = jax.random.split(jax.random.PRNGKey(1), len(requests))
-    uids = {engine.submit(r, k): r for r, k in zip(requests, keys)}
-    for uid, text in engine.stream():
-        print(f"[done uid={uid}] {uids[uid]!r} -> {text!r}")
+    sampling = [SamplingParams(tau=t, max_new_blocks=b)
+                for t, b in [(args.tau, None), (0.7, 3),
+                             (0.95, None), (args.tau, 2)]]
+    uids = {engine.submit(r, k, params=sp): r
+            for r, k, sp in zip(requests, keys, sampling)}
+    for out in engine.stream():
+        print(f"[done uid={out.uid} tau={out.params.tau:g} "
+              f"finish={out.finish_reason} "
+              f"latency={out.latency_ticks} ticks] "
+              f"{uids[out.uid]!r} -> {out.text!r}")
     s = engine.stats
     print(f"[engine] {s.rollouts} rollouts, {s.total_tokens} tokens, "
           f"{s.tokens_per_step:.2f} tokens/denoise-step, "
-          f"slot-util {s.utilization:.0%}, {s.wall_seconds:.2f}s")
+          f"slot-util {s.utilization:.0%}, latency p50/p95 "
+          f"{s.latency_p50:.0f}/{s.latency_p95:.0f} ticks, "
+          f"{s.wall_seconds:.2f}s")
 
     # live in-place weight update, then serve again (server stays up)
     new_params = jax.tree.map(lambda x: x, engine.store.params)

@@ -20,6 +20,20 @@ still-masked position whose top-1 probability exceeds tau (at least one —
 the best-confidence position — is always revealed).  Static decoding:
 reveal a fixed number of highest-confidence positions per step.
 
+Per-row sampling parameters: every decode knob a request may set —
+``tau``, ``temperature``, static-mode ``n_steps``, the dynamic/static
+mode itself, and the stop token — lives in **per-sequence vectors on
+``GenState``** and is read per row inside the jitted step (the two
+reveal policies are computed side by side and selected with a per-row
+``jnp.where``).  Nothing about a request's parameters is a jit static,
+so one compiled ``advance_block`` serves arbitrarily mixed
+configurations; the single remaining static is ``s_max``, the global
+denoise-loop bound (it fixes compiled loop structure, not data — rows
+whose policy finishes earlier just stop revealing).  A row decoded in a
+mixed batch is bit-identical to the same row in a homogeneous batch:
+every per-row branch selects between values computed from that row's
+own parameters only.
+
 RNG discipline: the state carries one rng key **per sequence** (shape
 (B, 2)); each denoise step splits every row's key independently, so a
 sequence's sample stream depends only on its own key — never on batch
@@ -50,6 +64,13 @@ class GenState:
     rng: jax.Array         # (B, 2) per-sequence rng keys
     limit: jax.Array       # (B,) exclusive block cursor cap per sequence
     n_denoise: jax.Array   # (B,) cumulative denoise steps actually used
+    # per-row sampling parameters (traced data, never jit statics — one
+    # compiled advance serves mixed configurations without retracing)
+    tau: jax.Array         # (B,) f32 dynamic-mode reveal threshold
+    temperature: jax.Array  # (B,) f32; 0 = greedy argmax
+    n_steps: jax.Array     # (B,) i32 static-mode denoise-step budget
+    dynamic: jax.Array     # (B,) bool: dynamic vs static reveal policy
+    eos: jax.Array         # (B,) i32 stop token (-1 disables EOS stop)
     # paged caches only: (B, L_max // block_size) block -> page id, -1 =
     # no page (None when the caches are dense per-sequence regions)
     table: jax.Array | None = None
@@ -61,6 +82,33 @@ def _per_seq_keys(rng, batch: int) -> jax.Array:
     if rng.ndim == 2:
         return rng
     return jax.random.split(rng, batch)
+
+
+def sampling_vectors(batch: int, *, tau=0.9, temperature=0.0, n_steps=8,
+                     mode="dynamic", eos_id=1) -> dict:
+    """Broadcast scalar-or-per-row sampling fields to (B,) vectors.
+
+    ``mode`` is either a string applied to every row or a (B,) bool
+    array (True = dynamic); the numeric fields accept scalars or (B,)
+    arrays.  Returns the ``GenState`` sampling-field dict.
+    """
+    if isinstance(mode, str):
+        if mode not in ("dynamic", "static"):
+            raise ValueError(f"mode must be dynamic|static, got {mode!r}")
+        dynamic = jnp.full((batch,), mode == "dynamic")
+    else:
+        dynamic = jnp.broadcast_to(jnp.asarray(mode, bool), (batch,))
+    return {
+        "tau": jnp.broadcast_to(
+            jnp.asarray(tau, jnp.float32), (batch,)),
+        "temperature": jnp.broadcast_to(
+            jnp.asarray(temperature, jnp.float32), (batch,)),
+        "n_steps": jnp.broadcast_to(
+            jnp.asarray(n_steps, jnp.int32), (batch,)),
+        "dynamic": dynamic,
+        "eos": jnp.broadcast_to(
+            jnp.asarray(eos_id, jnp.int32), (batch,)),
+    }
 
 
 def _select_boundary(caches, bounds, prompt_blocks):
@@ -153,14 +201,18 @@ def prefill_suffix(model, params, suffix_tokens, start_block: jax.Array,
                                 write_pages=write_pages)
 
 
-def denoise_block(model, params, caches, blk, rng, *,
-                  mode: str, tau: float, n_steps: int,
-                  temperature: float, s_max: int, table=None,
+def denoise_block(model, params, caches, blk, rng, *, tau, temperature,
+                  n_steps, dynamic, s_max: int, table=None,
                   memory=None, memory_valid=None):
     """Denoise one block for every sequence.
 
     ``rng`` is a (B, 2) batch of per-sequence keys; every row's stream is
     split independently so sampling is invariant to batch composition.
+    ``tau`` / ``temperature`` / ``n_steps`` / ``dynamic`` are (B,)
+    per-row vectors (see ``sampling_vectors``): both reveal policies are
+    evaluated and a per-row ``jnp.where`` selects, so rows with
+    different parameters share one compiled step.  Only ``s_max`` — the
+    loop bound — is static.
 
     Returns (ids, step_map, pos, rng, steps_used) where ``steps_used``
     (B,) is the number of denoise steps that actually revealed tokens for
@@ -175,7 +227,13 @@ def denoise_block(model, params, caches, blk, rng, *,
     B = blk.shape[0]
     pos = blk[:, None] * bsz + jnp.arange(bsz, dtype=jnp.int32)[None, :]
     cache_limit = blk * bsz
-    n_per_step = max(1, -(-bsz // max(n_steps, 1)))
+    # static mode reveals ceil(bsz / n_steps) positions per step
+    ns = jnp.maximum(n_steps, 1)
+    n_per_step = jnp.maximum(1, (bsz + ns - 1) // ns)        # (B,)
+    sample = temperature > 0
+    # rows with temperature 0 take the argmax branch; the divisor only
+    # has to be finite for them, the sampled candidate is discarded
+    safe_temp = jnp.where(sample, temperature, 1.0)
 
     def body(s, carry):
         ids, step_map, rng = carry
@@ -189,26 +247,32 @@ def denoise_block(model, params, caches, blk, rng, *,
         lf = lf.at[..., MASK].set(-jnp.inf)
         ks = jax.vmap(jax.random.split)(rng)     # (B, 2, 2)
         rng, kr = ks[:, 0], ks[:, 1]
-        if temperature > 0:
-            cand = jax.vmap(
-                lambda k, l: jax.random.categorical(k, l, axis=-1))(
-                    kr, lf / temperature)
-        else:
-            cand = jnp.argmax(lf, axis=-1)
+        # Gumbel-max categorical with the noise zeroed on greedy rows:
+        # bit-identical to jax.random.categorical(kr, lf/temp) where
+        # temperature > 0 (categorical IS argmax(logits + gumbel)) and
+        # to argmax(lf) where not (safe_temp = 1, noise = 0), for the
+        # cost of ONE vocab argmax instead of a per-policy pair
+        noise = jax.vmap(
+            lambda k: jax.random.gumbel(k, lf.shape[1:], lf.dtype))(kr)
+        cand = jnp.argmax(
+            lf / safe_temp[:, None, None]
+            + jnp.where(sample[:, None, None], noise, 0.0), axis=-1)
         probs = jax.nn.softmax(lf, axis=-1)
         conf = jnp.take_along_axis(probs, cand[..., None], axis=-1)[..., 0]
 
         masked = ids == MASK
         score = jnp.where(masked, conf, -1.0)
-        if mode == "dynamic":
-            reveal = masked & (conf >= tau)
-            # always reveal at least the best-confidence masked position
-            best = jnp.argmax(score, axis=-1)
-            force = jax.nn.one_hot(best, bsz, dtype=bool) & masked
-            reveal = reveal | (force & ~reveal.any(-1, keepdims=True))
-        else:
-            thr = jnp.sort(score, axis=-1)[:, -n_per_step][:, None]
-            reveal = masked & (score >= thr)
+        # dynamic: threshold reveal, and always at least the
+        # best-confidence masked position
+        rev_dyn = masked & (conf >= tau[:, None])
+        best = jnp.argmax(score, axis=-1)
+        force = jax.nn.one_hot(best, bsz, dtype=bool) & masked
+        rev_dyn = rev_dyn | (force & ~rev_dyn.any(-1, keepdims=True))
+        # static: the row's n_per_step highest-confidence positions
+        thr = jnp.take_along_axis(jnp.sort(score, axis=-1),
+                                  (bsz - n_per_step)[:, None], axis=-1)
+        rev_st = masked & (score >= thr)
+        reveal = jnp.where(dynamic[:, None], rev_dyn, rev_st)
         # last step: flush everything still masked
         reveal = jnp.where(s >= s_max - 1, masked, reveal)
 
@@ -224,9 +288,7 @@ def denoise_block(model, params, caches, blk, rng, *,
     return ids, step_map, pos, rng, steps_used
 
 
-def advance_block(model, params, st: GenState, *,
-                  mode: str, tau: float, n_steps: int,
-                  temperature: float, s_max: int, eos_id: int,
+def advance_block(model, params, st: GenState, *, s_max: int,
                   memory=None, memory_valid=None) -> GenState:
     """Advance every sequence of ``st`` by exactly one block (jittable).
 
@@ -236,7 +298,12 @@ def advance_block(model, params, st: GenState, *,
     block — idempotent, so inactive scheduler slots are harmless),
     commit the block into the caches, scatter tokens/step-map, then
     update cursors / done flags / actual-denoise-step counters.  A row
-    is done when its block hits EOS or its cursor reaches ``st.limit``.
+    is done when its block hits its own stop token (``st.eos``) or its
+    cursor reaches ``st.limit``.
+
+    All sampling parameters come from the state's per-row vectors —
+    ``s_max`` is the one static, so a single compiled instance serves
+    every mix of request configurations a pool can hold.
     """
     bsz = model.cfg.block_size
     B, L = st.tokens.shape
@@ -245,8 +312,9 @@ def advance_block(model, params, st: GenState, *,
 
     blk = jnp.minimum(st.blk, n_blocks_total - 1)
     ids, step_map, pos, rng, steps_used = denoise_block(
-        model, params, st.caches, blk, st.rng, mode=mode, tau=tau,
-        n_steps=n_steps, temperature=temperature, s_max=s_max,
+        model, params, st.caches, blk, st.rng, tau=st.tau,
+        temperature=st.temperature, n_steps=st.n_steps,
+        dynamic=st.dynamic, s_max=s_max,
         table=st.table, memory=memory, memory_valid=memory_valid)
     # frozen sequences re-commit their existing block (idempotent)
     old_ids = jnp.take_along_axis(st.tokens, pos, axis=1)
@@ -261,7 +329,7 @@ def advance_block(model, params, st: GenState, *,
                                   memory_valid=memory_valid)
     tokens = st.tokens.at[rows, pos].set(ids)
     steps = st.steps.at[rows, pos].set(step_map)
-    hit_eos = (ids == eos_id).any(axis=-1)
+    hit_eos = (ids == st.eos[:, None]).any(axis=-1)
     done = st.done | hit_eos
     new_blk = jnp.where(st.done, st.blk,
                         jnp.minimum(st.blk + 1, st.limit))
@@ -269,16 +337,21 @@ def advance_block(model, params, st: GenState, *,
     n_denoise = st.n_denoise + jnp.where(st.done, 0, steps_used)
     return GenState(tokens=tokens, steps=steps, caches=caches,
                     blk=new_blk, done=done, rng=rng, limit=st.limit,
-                    n_denoise=n_denoise, table=st.table)
+                    n_denoise=n_denoise, tau=st.tau,
+                    temperature=st.temperature, n_steps=st.n_steps,
+                    dynamic=st.dynamic, eos=st.eos, table=st.table)
 
 
 def init_state(model, params, prompt_tokens, prompt_blocks, rng, *,
-               max_len: int, limit=None,
+               max_len: int, limit=None, mode="dynamic", tau=0.9,
+               n_steps=8, temperature=0.0, eos_id=1,
                memory=None, memory_valid=None) -> GenState:
     """Prefill prompts and build the GenState ``advance_block`` consumes.
 
     ``limit``: per-sequence exclusive block cap (defaults to the full
-    cache capacity ``max_len // block_size``).
+    cache capacity ``max_len // block_size``).  The sampling fields
+    accept scalars (applied to every row) or (B,) per-row arrays — see
+    ``sampling_vectors``.
     """
     cfg = model.cfg
     bsz = cfg.block_size
@@ -303,19 +376,28 @@ def init_state(model, params, prompt_tokens, prompt_blocks, rng, *,
                     done=blk >= limit,
                     rng=_per_seq_keys(rng, B),
                     limit=limit,
-                    n_denoise=jnp.zeros((B,), jnp.int32))
+                    n_denoise=jnp.zeros((B,), jnp.int32),
+                    **sampling_vectors(B, tau=tau,
+                                       temperature=temperature,
+                                       n_steps=n_steps, mode=mode,
+                                       eos_id=eos_id))
 
 
 def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
-             max_len: int, s_max: int, mode: str = "dynamic",
-             tau: float = 0.9, n_steps: int = 8,
-             temperature: float = 0.0, eos_id: int = 1,
-             memory=None, memory_valid=None) -> dict:
+             max_len: int, s_max: int, mode="dynamic",
+             tau=0.9, n_steps=8, temperature=0.0, eos_id=1,
+             limit=None, memory=None, memory_valid=None) -> dict:
     """Full blockwise generation (jit-compatible; all shapes static).
 
     Returns {"tokens" (B, L_max), "steps" (B, L_max), "gen_blocks" (B,),
     "prompt_blocks" (B,), "done" (B,), "denoise_steps" (B,)} — everything
     RolloutBatch and the engine stats need.
+
+    Sampling parameters accept scalars or (B,) per-row arrays (``mode``:
+    a string or a (B,) bool array, True = dynamic), so a mixed-config
+    batch runs in one jitted call — the per-row contract the serving
+    stack's ``SamplingParams`` rides on.  ``limit`` optionally caps each
+    row's exclusive block cursor (None = cache capacity).
 
     The loop runs until every row is done (EOS or its own block budget),
     NOT for a trip count derived from the padded prompt width: in a
@@ -327,13 +409,12 @@ def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
     n_blocks_total = max_len // model.cfg.block_size
 
     st = init_state(model, params, prompt_tokens, prompt_blocks, rng,
-                    max_len=max_len, memory=memory,
+                    max_len=max_len, limit=limit, mode=mode, tau=tau,
+                    n_steps=n_steps, temperature=temperature,
+                    eos_id=eos_id, memory=memory,
                     memory_valid=memory_valid)
-    step = functools.partial(advance_block, model, params, mode=mode,
-                             tau=tau, n_steps=n_steps,
-                             temperature=temperature, s_max=s_max,
-                             eos_id=eos_id, memory=memory,
-                             memory_valid=memory_valid)
+    step = functools.partial(advance_block, model, params, s_max=s_max,
+                             memory=memory, memory_valid=memory_valid)
     # every live row advances its cursor each trip, so n_blocks_total
     # trips is a hard ceiling; the counter is belt-and-braces
     _, st = jax.lax.while_loop(
@@ -352,23 +433,26 @@ def generate(model, params, prompt_tokens, prompt_blocks, rng, *,
     }
 
 
-def count_gen_tokens(tokens, prompt_blocks, gen_blocks, *, eos_id: int,
+def count_gen_tokens(tokens, prompt_blocks, gen_blocks, *, eos_id,
                      block_size: int) -> np.ndarray:
     """Per-sequence generated-token count, cut at the first EOS.
 
     Counts tokens in the generated region up to and *including* the
     first EOS (the whole region when no EOS landed) — the honest
     tokens/sec numerator: when EOS lands mid-block the rest of that
-    block is padding the consumer trims, not served output.
+    block is padding the consumer trims, not served output.  ``eos_id``
+    is a scalar or a (B,) per-row array (mixed ``SamplingParams``
+    batches stop on per-request tokens; -1 disables).
     """
     tokens = np.asarray(tokens)
     pb = np.asarray(prompt_blocks).astype(np.int64)
     gb = np.asarray(gen_blocks).astype(np.int64)
+    eos_id = np.broadcast_to(np.asarray(eos_id), (tokens.shape[0],))
     out = np.zeros((tokens.shape[0],), np.int64)
     for i in range(tokens.shape[0]):
         lo, hi = pb[i] * block_size, (pb[i] + gb[i]) * block_size
         region = tokens[i, lo:hi]
-        eos = np.flatnonzero(region == eos_id)
+        eos = np.flatnonzero(region == eos_id[i])
         out[i] = eos[0] + 1 if eos.size else hi - lo
     return out
 

@@ -3,6 +3,12 @@ answer a request batch (or run a throughput loop).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tiny
   PYTHONPATH=src python -m repro.launch.serve --arch tiny --ckpt ck.msgpack --tau 0.95
+
+Mixed per-request traffic: ``--tau`` (and ``--temperature``) accept a
+comma-separated list — requests round-robin over the values as
+per-request ``SamplingParams`` on ONE slot pool, exercising the
+request-granular decode path (no engine rebuild, no retrace per
+config).  A single value behaves as before.
 """
 
 from __future__ import annotations
@@ -10,12 +16,24 @@ from __future__ import annotations
 import argparse
 
 
+def _float_list(s: str) -> list[float]:
+    return [float(v) for v in s.split(",") if v != ""]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--tau", type=float, default=0.9)
+    ap.add_argument("--tau", type=_float_list, default=[0.9],
+                    help="dynamic threshold; a comma list (e.g. "
+                         "0.5,0.9,0.99) round-robins per-request "
+                         "SamplingParams over one pool")
+    ap.add_argument("--temperature", type=_float_list, default=[0.0],
+                    help="sampling temperature; comma list round-robins "
+                         "like --tau")
+    ap.add_argument("--max-new-blocks", type=int, default=None,
+                    help="per-request response budget in blocks")
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--s-max", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
@@ -42,7 +60,8 @@ def main():
     from repro.data.math_tasks import sample_problem
     from repro.data.tokenizer import ByteTokenizer
     from repro.models.model import BlockDiffLM
-    from repro.serving.engine import GenerationConfig, RolloutEngine
+    from repro.serving.engine import (GenerationConfig, RolloutEngine,
+                                      SamplingParams)
     from repro.serving.server import ModelServer
 
     import random
@@ -56,23 +75,53 @@ def main():
     server = ModelServer(params)
     engine = RolloutEngine(model, server, GenerationConfig(
         max_len=args.max_len, s_max=args.s_max, mode="dynamic",
-        tau=args.tau, batching=args.batching, n_slots=args.slots,
+        tau=args.tau[0], temperature=args.temperature[0],
+        batching=args.batching, n_slots=args.slots,
         cache=args.cache, n_pages=args.pages,
         prefix_cache=args.prefix_cache))
     rng = random.Random(0)
     prompts = [sample_problem(rng, level=0).prompt
                for _ in range(args.requests)]
-    outs = engine.generate_texts(prompts, jax.random.PRNGKey(1))
-    for p, o in zip(prompts, outs):
-        print(f"{p!r} -> {o!r}")
+    # one SamplingParams per request, cycling over the CLI value lists
+    sampling = [SamplingParams(
+        tau=args.tau[i % len(args.tau)],
+        temperature=args.temperature[i % len(args.temperature)],
+        max_new_blocks=args.max_new_blocks,
+        eos_id=ByteTokenizer().eos_id)
+        for i in range(args.requests)]
+    mixed = len(args.tau) > 1 or len(args.temperature) > 1
+    if args.batching == "continuous":
+        # same per-request keys as generate_texts(rng=PRNGKey(1)) uses
+        # on the static path, so the printed completions match the
+        # --batching static run byte-for-byte (the cheap parity check)
+        keys = jax.random.split(jax.random.PRNGKey(1), args.requests)
+        for p, sp, k in zip(prompts, sampling, keys):
+            engine.submit(p, k, params=sp)
+        outs = {out.uid: out for out in engine.stream()}
+        for uid in sorted(outs):
+            out = outs[uid]
+            tag = f"tau={out.params.tau:g} " if mixed else ""
+            print(f"{prompts[uid]!r} -> {out.text!r}")
+            print(f"  [{uid}] {tag}finish={out.finish_reason} "
+                  f"latency={out.latency_ticks} ticks")
+    else:
+        outs = engine.generate_texts(prompts, jax.random.PRNGKey(1),
+                                     sampling=sampling)
+        for p, o in zip(prompts, outs):
+            print(f"{p!r} -> {o!r}")
     s = engine.stats
     line = (f"[engine] {s.rollouts} rollouts | {s.total_tokens} tokens | "
             f"{s.tokens_per_step:.2f} tokens/denoise-step | "
             f"{s.total_tokens / max(s.wall_seconds, 1e-9):.0f} tok/s")
     if args.batching == "continuous":
-        line += f" | slot-util {s.utilization:.0%}"
+        line += (f" | slot-util {s.utilization:.0%}"
+                 f" | latency p50 {s.latency_p50:.0f}"
+                 f"/p95 {s.latency_p95:.0f} ticks")
         if args.cache == "paged" and engine.scheduler.prefix is not None:
             line += f" | prefix-hit {s.prefix_hit_rate:.0%}"
+        if mixed:
+            line += (f" | {engine.scheduler.n_advance_traces} advance "
+                     f"trace(s) across {args.requests} mixed requests")
     print(line)
 
 

@@ -33,6 +33,13 @@ class DiPOConfig:
     aggregate: str = "token"     # Eq.8 (DAPO) | "seq" (Eq.6)
     normalize_std: bool = False
     logprob_scheme: str = "auto"  # packed | replay | fused_approx
+    # optional per-group denoise thresholds (DiFFPO's "reason fast and
+    # furious" lever): prompt group p rolls out with tau
+    # ``group_taus[p % len(group_taus)]`` instead of the engine default
+    # — request-granular SamplingParams, so the mixed-τ batch shares
+    # one pool with zero retraces and prompt pages still dedupe per
+    # group (params never touch prompt KV).  None = engine default τ.
+    group_taus: tuple[float, ...] | None = None
 
 
 class DiPOTrainer:
@@ -87,8 +94,16 @@ class DiPOTrainer:
         t0 = time.perf_counter()
         answers = np.repeat(prompt_batch.answers, G, axis=0)
         rng, kr = jax.random.split(rng)
+        sampling = None
+        if cfg.group_taus:
+            # per-group τ: one SamplingParams per prompt, expanded to
+            # the group's G adjacent members by generate_group_ids
+            sampling = [self.engine.gen_cfg.sampling(
+                tau=cfg.group_taus[p % len(cfg.group_taus)])
+                for p in range(P)]
         gen = self.engine.generate_group_ids(
-            prompt_batch.prompt_tokens, prompt_batch.prompt_blocks, kr, G)
+            prompt_batch.prompt_tokens, prompt_batch.prompt_blocks, kr, G,
+            sampling=sampling)
         t_roll = time.perf_counter() - t0
 
         # ---- rewards ---------------------------------------------------

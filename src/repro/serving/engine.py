@@ -7,6 +7,17 @@ order.  The lock-step one-shot path (every request padded to the batch
 max and decoded to drain — the pre-refactor behaviour) is kept as
 ``batching="static"`` for A/B benchmarking (benchmarks/serve_bench.py).
 
+Request API (``serving.api``): every decode parameter is
+request-granular.  ``submit(prompt, params=SamplingParams(...))``
+queues a text request with its own τ / temperature / mode / step
+budget / block budget / stop token / seed; ``generate_ids(...,
+sampling=...)`` runs a whole batch of mixed configurations through one
+jitted call (static path) or one slot pool (continuous path) — the
+parameters ride in per-row vectors, so serving mixed traffic never
+retraces and a row's tokens are bit-identical to a homogeneous run.
+``stream()`` yields structured ``RequestOutput`` records (uid, text,
+``finish_reason`` "eos" | "length", admit→finish latency in ticks).
+
 Contracts kept:
   * ``generate_ids(prompt_tokens, prompt_blocks, rng) -> gen dict`` —
     row order == input order, token- and step-map-identical between the
@@ -19,7 +30,8 @@ Contracts kept:
     early-exit included), not ``blocks * s_max``; ``total_tokens``
     counts generated tokens up to the first EOS inclusive (not the
     block-padded tail); continuous runs also record slot utilization
-    (active slot-ticks / paid slot-ticks).
+    (active slot-ticks / paid slot-ticks) and admit→finish latency
+    (``latency_p50`` / ``latency_p95``, in scheduler ticks).
 
 The continuous path's KV layout is selectable: ``cache="dense"`` (each
 slot owns a ``max_len`` cache region) or ``cache="paged"`` (slots share
@@ -28,9 +40,11 @@ see serving.scheduler).  Paged pools add a third layer,
 ``prefix_cache`` (auto-on for pure-attention stacks): a refcounted
 radix index shares committed prompt pages across requests, so DiPO's
 G-rollouts-per-prompt groups (``generate_group_ids``) prefill each
-unique prompt once and hold one copy of its KV.  All layouts produce
-byte-identical tokens; ``EngineStats.prefix_hit_rate`` reports the
-fraction of prompt blocks served from shared pages.
+unique prompt once and hold one copy of its KV.  Sampling params never
+affect prompt KV, so mixed-params requests share prefix pages freely.
+All layouts produce byte-identical tokens; ``EngineStats.
+prefix_hit_rate`` reports the fraction of prompt blocks served from
+shared pages.
 
 The engine reads weights from a ``ModelServer`` (in-place updates) or
 ``OfflineWeightStore`` (checkpoint baseline) — swapping one for the
@@ -43,6 +57,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+from collections import deque
 from typing import Iterator, Sequence
 
 import jax
@@ -52,24 +67,12 @@ import numpy as np
 from repro.core import decoding
 from repro.data.tokenizer import ByteTokenizer
 from repro.data.pipeline import pad_to_block
+from repro.serving.api import (GenerationConfig, RequestOutput,
+                               SamplingParams)
 from repro.serving.scheduler import Completion, SlotScheduler
 
-
-@dataclasses.dataclass
-class GenerationConfig:
-    max_len: int = 256
-    s_max: int = 8               # max denoise steps per block
-    mode: str = "dynamic"        # dynamic | static
-    tau: float = 0.9
-    n_steps: int = 8             # static: denoise steps per block
-    temperature: float = 0.0
-    eos_id: int = 1
-    batching: str = "continuous"  # continuous (slot pool) | static
-    n_slots: int = 8             # continuous: decode-slot pool size
-    cache: str = "dense"         # continuous: dense | paged KV layout
-    n_pages: int | None = None   # paged: pool size (None = dense-equal)
-    prefix_cache: bool | None = None  # paged: share prompt pages across
-    # requests (None = auto: on for pure-attention backbones)
+__all__ = ["EngineStats", "GenerationConfig", "RequestOutput",
+           "RolloutEngine", "SamplingParams"]
 
 
 @dataclasses.dataclass
@@ -82,6 +85,11 @@ class EngineStats:
     active_slot_ticks: int = 0    # continuous: useful slot-steps
     prefix_hit_blocks: int = 0    # prompt blocks served from shared pages
     prefix_miss_blocks: int = 0   # prompt blocks that paid a prefill
+    # continuous: per-completion admit -> finish latency, in scheduler
+    # ticks (one tick = one block-advance over the pool).  Bounded: a
+    # long-lived server keeps the most recent window, not every request
+    latencies: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=4096))
 
     @property
     def tokens_per_step(self) -> float:
@@ -98,6 +106,18 @@ class EngineStats:
         total = self.prefix_hit_blocks + self.prefix_miss_blocks
         return self.prefix_hit_blocks / max(total, 1)
 
+    @property
+    def latency_p50(self) -> float:
+        """Median admit -> finish latency in scheduler ticks."""
+        return float(np.percentile(list(self.latencies), 50)) \
+            if self.latencies else 0.0
+
+    @property
+    def latency_p95(self) -> float:
+        """95th-percentile admit -> finish latency in scheduler ticks."""
+        return float(np.percentile(list(self.latencies), 95)) \
+            if self.latencies else 0.0
+
 
 class RolloutEngine:
     def __init__(self, model, weight_store, gen_cfg: GenerationConfig,
@@ -110,54 +130,90 @@ class RolloutEngine:
         self.last_call: dict = {}
         self._pending: list[Completion] = []   # stream() completions
         # harvested while a generate_ids drain drove the shared pool
-        self._gen_jit = jax.jit(
-            functools.partial(
-                decoding.generate, model,
-                max_len=gen_cfg.max_len, s_max=gen_cfg.s_max,
-                mode=gen_cfg.mode, tau=gen_cfg.tau,
-                n_steps=gen_cfg.n_steps,
-                temperature=gen_cfg.temperature, eos_id=gen_cfg.eos_id),
-            static_argnames=())
+        self._rng = jax.random.PRNGKey(0)      # submit() key stream
+        # sampling parameters enter as traced (B,) vectors, so one
+        # compiled executable serves every config mix; only max_len and
+        # s_max (shapes / loop bound) are baked in
+        self._gen_jit = jax.jit(functools.partial(
+            decoding.generate, model,
+            max_len=gen_cfg.max_len, s_max=gen_cfg.s_max))
         self._sched: SlotScheduler | None = None
 
     @property
     def scheduler(self) -> SlotScheduler:
-        """The persistent slot pool (created on first use)."""
+        """The persistent slot pool (created on first use).
+
+        The whole ``GenerationConfig`` is handed over as one object —
+        the scheduler reads the pool fields and derives its default
+        ``SamplingParams`` from the decode fields, so a new config knob
+        is threaded exactly once.
+        """
         if self._sched is None:
-            g = self.gen_cfg
-            self._sched = SlotScheduler(
-                self.model, n_slots=g.n_slots, max_len=g.max_len,
-                s_max=g.s_max, mode=g.mode, tau=g.tau, n_steps=g.n_steps,
-                temperature=g.temperature, eos_id=g.eos_id,
-                cache=g.cache, n_pages=g.n_pages,
-                prefix_cache=g.prefix_cache)
+            self._sched = SlotScheduler(self.model, self.gen_cfg)
         return self._sched
+
+    # ------------------------------------------------------- sampling
+    def _resolve_sampling(self, B: int, sampling, prompt_blocks):
+        """Normalise ``sampling`` to a per-row params list + the vector
+        kwargs ``decoding.generate`` consumes (incl. per-row ``limit``).
+        """
+        if sampling is None:
+            plist = [self.gen_cfg.sampling()] * B
+        elif isinstance(sampling, SamplingParams):
+            plist = [sampling] * B
+        else:
+            plist = list(sampling)
+            if len(plist) != B:
+                raise ValueError(
+                    f"sampling list has {len(plist)} entries "
+                    f"for a batch of {B}")
+        nbt = self.gen_cfg.max_len // self.model.cfg.block_size
+        pb = np.asarray(prompt_blocks, np.int64)
+        limit = np.full((B,), nbt, np.int32)
+        for i, p in enumerate(plist):
+            if p.max_new_blocks is not None:
+                limit[i] = min(nbt, int(pb[i]) + p.max_new_blocks)
+        kw = dict(
+            tau=np.array([p.tau for p in plist], np.float32),
+            temperature=np.array([p.temperature for p in plist],
+                                 np.float32),
+            n_steps=np.array([p.n_steps for p in plist], np.int32),
+            mode=np.array([p.dynamic for p in plist], bool),
+            eos_id=np.array([p.eos_id for p in plist], np.int32),
+            limit=limit)
+        return plist, kw
 
     # ------------------------------------------------------------------
     def generate_ids(self, prompt_tokens: np.ndarray,
-                     prompt_blocks: np.ndarray, rng) -> dict:
+                     prompt_blocks: np.ndarray, rng,
+                     sampling=None) -> dict:
         """Run blockwise decode on pre-tokenised prompts.
 
-        Row order of the returned dict matches the input; the static and
-        continuous paths are token-identical for the same ``rng``.
+        ``sampling``: None (config defaults), one ``SamplingParams``
+        applied to every row, or a per-row sequence — a mixed batch
+        costs no extra compilation on either path.  Row order of the
+        returned dict matches the input; the static and continuous
+        paths are token-identical for the same ``rng``.
         """
         t0 = time.perf_counter()
         params = self.store.params   # offline store pays a load here
+        B = prompt_tokens.shape[0]
+        plist, vec_kw = self._resolve_sampling(B, sampling, prompt_blocks)
         if self.gen_cfg.batching == "static":
             gen = self._gen_jit(params, jnp.asarray(prompt_tokens),
-                                jnp.asarray(prompt_blocks), rng)
+                                jnp.asarray(prompt_blocks), rng, **vec_kw)
             jax.block_until_ready(gen["tokens"])
             self.last_call = {"batching": "static"}
         else:
             gen = self._generate_ids_continuous(params, prompt_tokens,
-                                                prompt_blocks, rng)
+                                                prompt_blocks, rng, plist)
         dt = time.perf_counter() - t0
-        B = prompt_tokens.shape[0]
         self.stats.rollouts += B
         # honest tokens/sec numerator: count only up to the first EOS
+        # (each row's own stop token)
         self.stats.total_tokens += int(decoding.count_gen_tokens(
             gen["tokens"], gen["prompt_blocks"], gen["gen_blocks"],
-            eos_id=self.gen_cfg.eos_id,
+            eos_id=np.array([p.eos_id for p in plist], np.int32),
             block_size=self.model.cfg.block_size).sum())
         self.stats.total_steps += int(jnp.sum(gen["denoise_steps"]))
         self.stats.wall_seconds += dt
@@ -165,25 +221,31 @@ class RolloutEngine:
 
     def generate_group_ids(self, prompt_tokens: np.ndarray,
                            prompt_blocks: np.ndarray, rng,
-                           group_size: int) -> dict:
+                           group_size: int, sampling=None) -> dict:
         """Roll out ``group_size`` trajectories per prompt (DiPO groups).
 
         Expands (P, Lp) prompts to a (P*G, Lp) batch with each group's G
         members *adjacent*, then runs ``generate_ids`` — identical rng
         layout to repeating the prompts by hand, so results are
-        unchanged.  The point of the dedicated entry is the serving
-        side: adjacent identical prompts admit back-to-back, so with
-        ``cache="paged"`` + ``prefix_cache`` the first member registers
-        the prompt's pages and the other G-1 map them straight into
-        their block tables — one prefill and one KV copy per *unique*
-        prompt instead of per request.
+        unchanged.  ``sampling`` may be one ``SamplingParams`` or a
+        per-*prompt* sequence (length P, expanded across each group) —
+        the per-group τ lever DiFFPO trains with.  The point of the
+        dedicated entry is the serving side: adjacent identical prompts
+        admit back-to-back, so with ``cache="paged"`` + ``prefix_cache``
+        the first member registers the prompt's pages and the other G-1
+        map them straight into their block tables — one prefill and one
+        KV copy per *unique* prompt (sampling params never affect
+        prompt KV, so mixed-τ groups share exactly the same).
         """
         toks = np.repeat(np.asarray(prompt_tokens), group_size, axis=0)
         blocks = np.repeat(np.asarray(prompt_blocks), group_size, axis=0)
-        return self.generate_ids(toks, blocks, rng)
+        if sampling is not None and not isinstance(sampling,
+                                                   SamplingParams):
+            sampling = [p for p in sampling for _ in range(group_size)]
+        return self.generate_ids(toks, blocks, rng, sampling=sampling)
 
     def _generate_ids_continuous(self, params, prompt_tokens,
-                                 prompt_blocks, rng) -> dict:
+                                 prompt_blocks, rng, plist) -> dict:
         """Drain a fixed request batch through the slot pool."""
         sched = self.scheduler
         prompt_tokens = np.asarray(prompt_tokens)
@@ -191,14 +253,13 @@ class RolloutEngine:
         B, Lp = prompt_tokens.shape
         max_len = self.gen_cfg.max_len
         # the one-shot generate runs every row to its own block budget
-        # (EOS or cache capacity), so the slot pool must too — a budget
-        # derived from the *padded* width would truncate short-prompt
-        # rows and break static/continuous parity
+        # (EOS, max_new_blocks, or cache capacity), so the slot pool
+        # must too — per-row limits, never the padded width
         keys = decoding._per_seq_keys(rng, B)
         uid_to_row = {}
         for i in range(B):
             uid = sched.submit(prompt_tokens[i], int(prompt_blocks[i]),
-                               keys[i], max_new_blocks=None)
+                               keys[i], params=plist[i])
             uid_to_row[uid] = i
 
         tokens = np.zeros((B, max_len), np.int32)
@@ -224,12 +285,11 @@ class RolloutEngine:
                 steps[row] = comp.steps
                 gen_blocks[row] = comp.gen_blocks
                 denoise[row] = comp.denoise_steps
-                # static parity: a zero-budget row (no loop trips) is
-                # never flagged done by the one-shot generate either
-                done[row] = comp.finished_eos or (
-                    comp.gen_blocks > 0
-                    and comp.prompt_blocks + comp.gen_blocks
-                    >= sched.n_blocks_total)
+                # static parity: a decoded row completes only at EOS or
+                # its limit (both done in the one-shot generate); a
+                # zero-budget row (no loop trips) is never flagged done
+                done[row] = comp.gen_blocks > 0
+                self.stats.latencies.append(comp.latency_ticks)
                 n_done += 1
         self.stats.slot_ticks += sched.stats.slot_ticks - slot0
         self.stats.active_slot_ticks += \
@@ -258,17 +318,31 @@ class RolloutEngine:
                            self.tok.pad_id)
         return np.asarray(enc, np.int32), len(enc) // bsz
 
-    def submit(self, prompt: str, rng) -> int:
-        """Queue one text request on the live pool; returns its uid."""
-        toks, blocks = self._encode_prompt(prompt)
-        return self.scheduler.submit(toks, blocks, rng)
+    def submit(self, prompt: str, rng=None,
+               params: SamplingParams | None = None) -> int:
+        """Queue one text request on the live pool; returns its uid.
 
-    def stream(self, params=None) -> Iterator[tuple[int, str]]:
-        """Drive the pool until it drains, yielding (uid, text) in
-        completion order — new ``submit``s may land mid-stream.
+        ``params`` carries the request's own decode configuration
+        (pool defaults otherwise).  ``rng`` may be omitted: with
+        ``params.seed`` set the key derives from the seed, else the
+        engine draws from its internal key stream.
+        """
+        toks, blocks = self._encode_prompt(prompt)
+        if rng is None and (params is None or params.seed is None):
+            self._rng, rng = jax.random.split(self._rng)
+        return self.scheduler.submit(toks, blocks, rng, params=params)
+
+    def stream(self, params=None) -> Iterator[RequestOutput]:
+        """Drive the pool until it drains, yielding ``RequestOutput``
+        records in completion order — new ``submit``s may land
+        mid-stream.
 
         With ``params=None`` the live store weights are re-read every
         tick, so in-place server updates take effect mid-stream."""
+        if isinstance(params, SamplingParams):
+            raise TypeError(
+                "stream(params=) takes model weights; per-request "
+                "SamplingParams belong on submit(..., params=...)")
         sched = self.scheduler
         live = params is None
         while sched.has_work or self._pending:
@@ -296,23 +370,40 @@ class RolloutEngine:
                 self.stats.rollouts += 1
                 self.stats.total_tokens += comp.gen_tokens
                 self.stats.total_steps += comp.denoise_steps
-                yield comp.uid, self._completion_text(comp)
+                self.stats.latencies.append(comp.latency_ticks)
+                yield self._to_output(comp)
 
-    def _completion_text(self, comp: Completion) -> str:
+    def _to_output(self, comp: Completion) -> RequestOutput:
+        """Package a raw completion into the structured streaming
+        record (text and ids trimmed at the request's own stop token)."""
         bsz = self.model.cfg.block_size
         lo = comp.prompt_blocks * bsz
-        hi = lo + comp.gen_blocks * bsz
-        return self._trim_eos(comp.tokens[lo:hi])
+        ids = self._trim_ids(comp.tokens[lo:lo + comp.gen_blocks * bsz],
+                             comp.params.eos_id)
+        return RequestOutput(
+            uid=comp.uid, text=self.tok.decode(ids), token_ids=ids,
+            finish_reason=comp.finish_reason,
+            prompt_blocks=comp.prompt_blocks,
+            gen_blocks=comp.gen_blocks, gen_tokens=comp.gen_tokens,
+            denoise_steps=comp.denoise_steps,
+            admitted_tick=comp.admitted_tick,
+            completed_tick=comp.completed_tick, params=comp.params)
 
-    def _trim_eos(self, ids: np.ndarray) -> str:
+    @staticmethod
+    def _trim_ids(ids: np.ndarray, eos_id: int) -> np.ndarray:
+        """Cut a generated region at the first EOS token (exclusive)."""
+        eos = np.flatnonzero(ids == eos_id)
+        return ids[:eos[0]] if eos.size else ids
+
+    def _trim_eos(self, ids: np.ndarray, eos_id: int | None = None) -> str:
         """Decode a completion, trimmed at the first EOS token."""
-        eos = np.flatnonzero(ids == self.gen_cfg.eos_id)
-        if eos.size:
-            ids = ids[:eos[0]]
-        return self.tok.decode(ids)
+        if eos_id is None:
+            eos_id = self.gen_cfg.eos_id
+        return self.tok.decode(self._trim_ids(ids, eos_id))
 
     # ----------------------------------------------------- batch texts
-    def generate_texts(self, prompts: Sequence[str], rng) -> list[str]:
+    def generate_texts(self, prompts: Sequence[str], rng,
+                       sampling=None) -> list[str]:
         bsz = self.model.cfg.block_size
         encs = [self._encode_prompt(p) for p in prompts]
         lp = max(e.shape[0] for e, _ in encs)
@@ -321,11 +412,15 @@ class RolloutEngine:
         for i, (e, nb) in enumerate(encs):
             toks[i, :e.shape[0]] = e
             blocks[i] = nb
-        gen = self.generate_ids(toks, blocks, rng)
+        # resolve once; generate_ids treats the normalised per-row list
+        # as-is, so the params seen here and there cannot drift
+        plist, _ = self._resolve_sampling(len(prompts), sampling, blocks)
+        gen = self.generate_ids(toks, blocks, rng, sampling=plist)
         outs = []
         for i in range(len(prompts)):
             start = int(blocks[i]) * bsz
             end = start + int(gen["gen_blocks"][i]) * bsz
-            outs.append(self._trim_eos(np.asarray(gen["tokens"][i,
-                                                               start:end])))
+            outs.append(self._trim_eos(
+                np.asarray(gen["tokens"][i, start:end]),
+                eos_id=plist[i].eos_id))
         return outs

@@ -85,6 +85,25 @@ exactly then.  Byte-for-byte token parity between prefix-cache on/off
 additionally assumes the cache dtype equals the activation dtype (the
 fp32 default) — see ``core.decoding.prefill_suffix``.
 
+Per-request sampling (``serving.api.SamplingParams``)
+-----------------------------------------------------
+Every decode parameter — tau, temperature, dynamic/static mode, static
+n_steps, block budget, stop token, seed — is **request-granular**:
+``submit(..., params=SamplingParams(...))`` scatters the request's
+values into per-row vectors on the pooled ``GenState`` at admission,
+and the jitted ``advance_block`` reads them per row.  One compiled
+step therefore serves arbitrarily mixed configurations with zero
+retraces (``n_advance_traces`` counts compilations — it stays at 1
+after warmup no matter what parameter mix arrives); the pool-level
+``s_max`` is the single remaining static.  Mixed-batch outputs are
+byte-identical per row to homogeneous runs (tests/
+test_sampling_params.py).
+
+Sampling parameters never touch the prefix cache: prompt prefill is
+parameter-free, so the radix index keys on prompt *content* only and
+requests with different τ/temperature/budgets share prompt pages
+freely — a params change can never invalidate cached prompt KV.
+
 Request lifecycle: ``submit() -> queued -> admitted (slot) -> decoding
 -> completed`` — completions stream out of ``step()``/``run()`` in
 finish order, not arrival order.
@@ -105,7 +124,6 @@ admission + preemption.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from collections import deque
 from typing import Iterator
 
@@ -115,17 +133,12 @@ import numpy as np
 
 from repro.core import decoding
 from repro.models import attention
+from repro.serving.api import GenerationConfig, Request, SamplingParams
 from repro.serving.prefix_cache import PrefixIndex, chain_keys
 
-
-@dataclasses.dataclass
-class Request:
-    """One generation request (prompt already tokenised, block-aligned)."""
-    uid: int
-    prompt: np.ndarray           # (Lp,) int32, Lp = prompt_blocks * bsz
-    prompt_blocks: int           # true prompt length in blocks
-    rng: jax.Array               # (2,) per-request rng key
-    max_new_blocks: int | None = None   # None = fill cache capacity
+# distinguishes "caller did not pass max_new_blocks" from an explicit
+# None (= decode to cache capacity) in submit()
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -138,9 +151,19 @@ class Completion:
     gen_blocks: int
     gen_tokens: int              # generated tokens up to first EOS incl.
     denoise_steps: int           # actual denoise steps executed (dynamic)
-    finished_eos: bool           # True: EOS; False: hit block budget
+    finish_reason: str           # "eos" | "length" (hit block budget)
     admitted_tick: int
     completed_tick: int
+    params: SamplingParams = SamplingParams()
+
+    @property
+    def finished_eos(self) -> bool:
+        return self.finish_reason == "eos"
+
+    @property
+    def latency_ticks(self) -> int:
+        """Admit -> finish latency in scheduler ticks."""
+        return self.completed_tick - self.admitted_tick
 
 
 @dataclasses.dataclass
@@ -180,27 +203,40 @@ class SchedulerStats:
 
 
 class SlotScheduler:
-    """Fixed-slot continuous batcher over one jitted block-advance."""
+    """Fixed-slot continuous batcher over one jitted block-advance.
 
-    def __init__(self, model, n_slots: int, max_len: int, *,
-                 s_max: int = 8, mode: str = "dynamic", tau: float = 0.9,
-                 n_steps: int = 8, temperature: float = 0.0,
-                 eos_id: int = 1, cache: str = "dense",
-                 n_pages: int | None = None,
-                 prefix_cache: bool | None = None):
+    Construction takes one ``GenerationConfig`` (pool shape + cache
+    layout + the *default* ``SamplingParams`` for requests that carry
+    none) — keyword overrides patch individual fields, so legacy
+    ``SlotScheduler(model, n_slots=..., tau=...)`` call sites keep
+    working without mirroring every config field through the signature.
+    """
+
+    def __init__(self, model, gen_cfg: GenerationConfig | None = None,
+                 **overrides):
+        if gen_cfg is None:
+            gen_cfg = GenerationConfig()
+        if overrides:
+            gen_cfg = dataclasses.replace(gen_cfg, **overrides)
         cfg = model.cfg
+        n_slots, max_len = gen_cfg.n_slots, gen_cfg.max_len
+        cache = gen_cfg.cache
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if cache not in ("dense", "paged"):
             raise ValueError(f"cache must be dense|paged, got {cache!r}")
         assert max_len % cfg.block_size == 0
         self.model = model
+        self.gen_cfg = gen_cfg
+        self.default_params = gen_cfg.sampling()
         self.n_slots = n_slots
         self.max_len = max_len
         self.n_blocks_total = max_len // cfg.block_size
-        self.eos_id = eos_id
+        self.eos_id = gen_cfg.eos_id        # default stop token
         self.cache = cache
         self.stats = SchedulerStats()
+        n_pages = gen_cfg.n_pages
+        prefix_cache = gen_cfg.prefix_cache
 
         self.prefix: PrefixIndex | None = None
         if cache == "paged":
@@ -244,11 +280,19 @@ class SlotScheduler:
         # donate the pool state: the old GenState (slot caches included)
         # is always dead after the call, so advance/admit alias their
         # buffers in place instead of holding a 2x-peak copy per tick
-        # (backends without donation support just ignore the hint)
-        self._advance = jax.jit(functools.partial(
-            decoding.advance_block, model, mode=mode, tau=tau,
-            n_steps=n_steps, temperature=temperature, s_max=s_max,
-            eos_id=eos_id), donate_argnums=(1,))
+        # (backends without donation support just ignore the hint).
+        # All sampling parameters live in GenState's per-row vectors;
+        # s_max is the single static, so one trace serves every request
+        # mix — n_advance_traces counts compilations to prove it (the
+        # function body below only runs when jax traces it).
+        self.n_advance_traces = 0
+        s_max = gen_cfg.s_max
+
+        def _advance_impl(params, st):
+            self.n_advance_traces += 1
+            return decoding.advance_block(model, params, st, s_max=s_max)
+
+        self._advance = jax.jit(_advance_impl, donate_argnums=(1,))
         self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(1,))
         self._admit_hit_jit = jax.jit(self._admit_hit_impl,
                                       donate_argnums=(0,))
@@ -297,6 +341,11 @@ class SlotScheduler:
             rng=jnp.zeros((S, 2), jnp.uint32),
             limit=jnp.zeros((S,), jnp.int32),
             n_denoise=jnp.zeros((S,), jnp.int32),
+            # free slots carry inert sampling rows (eos -1 = disabled);
+            # admission overwrites them with the request's params
+            **decoding.sampling_vectors(S, tau=0.0, temperature=0.0,
+                                        n_steps=1, mode="static",
+                                        eos_id=-1),
             table=table)
 
     @staticmethod
@@ -319,14 +368,25 @@ class SlotScheduler:
         return jax.tree.map(lambda p, n: p.at[slot].set(n[0]), pool, new)
 
     @staticmethod
+    def _samp_scalars(p: SamplingParams) -> tuple:
+        """A request's sampling fields as traced jit scalars — different
+        values reuse the compiled admit executables, never retrace."""
+        return (jnp.float32(p.tau), jnp.float32(p.temperature),
+                jnp.int32(p.n_steps), jnp.bool_(p.dynamic),
+                jnp.int32(p.eos_id))
+
+    @staticmethod
     def _scatter_slot(st: decoding.GenState, slot, row, key, limit, blk,
-                      caches, table) -> decoding.GenState:
+                      caches, table, samp) -> decoding.GenState:
         """Write one admitted request's per-slot state into the pool.
 
         Every admission path (cold prefill, full prefix hit, suffix
         prefill) funnels through this single GenState constructor, so a
-        new per-sequence field only needs threading once.
+        new per-sequence field only needs threading once.  ``samp`` is
+        the ``_samp_scalars`` tuple — the request's SamplingParams
+        landing in the pool's per-row vectors.
         """
+        tau, temp, n_steps, dynamic, eos = samp
         return decoding.GenState(
             tokens=st.tokens.at[slot].set(row),
             steps=st.steps.at[slot].set(0),
@@ -336,10 +396,15 @@ class SlotScheduler:
             rng=st.rng.at[slot].set(key),
             limit=st.limit.at[slot].set(limit),
             n_denoise=st.n_denoise.at[slot].set(0),
+            tau=st.tau.at[slot].set(tau),
+            temperature=st.temperature.at[slot].set(temp),
+            n_steps=st.n_steps.at[slot].set(n_steps),
+            dynamic=st.dynamic.at[slot].set(dynamic),
+            eos=st.eos.at[slot].set(eos),
             table=table)
 
     def _admit_impl(self, params, st: decoding.GenState, slot,
-                    prompt, pblocks, key, limit,
+                    prompt, pblocks, key, limit, samp,
                     pages=None) -> decoding.GenState:
         """Prefill one request (B=1) and scatter it into slot ``slot``.
 
@@ -370,10 +435,11 @@ class SlotScheduler:
         if paged:
             table = table.at[slot, :pages.shape[0]].set(pages)
         return self._scatter_slot(st, slot, row, key, limit, pblocks[0],
-                                  caches, table)
+                                  caches, table, samp)
 
     def _admit_hit_impl(self, st: decoding.GenState, slot, row, key,
-                        limit, table_row, pblocks) -> decoding.GenState:
+                        limit, table_row, pblocks,
+                        samp) -> decoding.GenState:
         """Admit a full prefix-cache hit: every prompt block is already
         committed in shared pages, so no model call happens at all —
         just scatter the slot's tokens / cursor / rng / block table.
@@ -381,11 +447,11 @@ class SlotScheduler:
         """
         return self._scatter_slot(st, slot, row, key, limit, pblocks,
                                   st.caches,
-                                  st.table.at[slot].set(table_row))
+                                  st.table.at[slot].set(table_row), samp)
 
     def _admit_suffix_impl(self, params, st: decoding.GenState, slot,
                            suffix, row, key, limit, ctx_pages, sfx_pages,
-                           table_row) -> decoding.GenState:
+                           table_row, samp) -> decoding.GenState:
         """Admit a partial prefix-cache hit: prefill only the suffix.
 
         ``suffix`` (1, Ls) are the prompt blocks beyond the hit;
@@ -403,7 +469,7 @@ class SlotScheduler:
             context_table=ctx_pages[None], write_pages=sfx_pages[None])
         return self._scatter_slot(st, slot, row, key, limit, pblocks,
                                   caches,
-                                  st.table.at[slot].set(table_row))
+                                  st.table.at[slot].set(table_row), samp)
 
     def _admit_paged(self, params, slot: int, req: Request,
                      budget: int) -> bool:
@@ -419,6 +485,7 @@ class SlotScheduler:
         bsz = cfg.block_size
         pb = req.prompt_blocks
         limit = pb + budget
+        samp = self._samp_scalars(req.params)
         if self.prefix is None:
             if self._pages_reserved + limit > self.n_usable_pages:
                 return False
@@ -433,9 +500,12 @@ class SlotScheduler:
             self._state = self._admit_jit(
                 params, self._state, jnp.int32(slot), req.prompt[None],
                 jnp.asarray([pb], jnp.int32), req.rng, jnp.int32(limit),
-                jnp.asarray(pages, jnp.int32))
+                samp, jnp.asarray(pages, jnp.int32))
             return True
 
+        # the prefix index keys on prompt *content* only — sampling
+        # params shape decoding, never prompt KV, so requests with
+        # different params share (and register) pages identically
         keys = chain_keys(req.prompt, bsz)
         hits = self.prefix.match(keys)
         h = len(hits)
@@ -478,7 +548,7 @@ class SlotScheduler:
             self._state = self._admit_jit(
                 params, self._state, jnp.int32(slot), req.prompt[None],
                 jnp.asarray([pb], jnp.int32), req.rng, jnp.int32(limit),
-                jnp.asarray(new_pages, jnp.int32))
+                samp, jnp.asarray(new_pages, jnp.int32))
             return True
         row = np.full((self.max_len,), cfg.resolved_mask_token, np.int32)
         row[:pb * bsz] = req.prompt
@@ -486,13 +556,13 @@ class SlotScheduler:
             # full hit (the DiPO G-group case): zero prefill
             self._state = self._admit_hit_jit(
                 self._state, jnp.int32(slot), jnp.asarray(row), req.rng,
-                jnp.int32(limit), table_row, jnp.int32(pb))
+                jnp.int32(limit), table_row, jnp.int32(pb), samp)
         else:
             self._state = self._admit_suffix_jit(
                 params, self._state, jnp.int32(slot),
                 req.prompt[None, h * bsz:], jnp.asarray(row), req.rng,
                 jnp.int32(limit), jnp.asarray(hit_pages, jnp.int32),
-                jnp.asarray(new_pages, jnp.int32), table_row)
+                jnp.asarray(new_pages, jnp.int32), table_row, samp)
         return True
 
     def _empty_completion(self, req: Request) -> Completion:
@@ -514,14 +584,24 @@ class SlotScheduler:
             uid=req.uid, tokens=tokens,
             steps=np.zeros((self.max_len,), np.int32),
             prompt_blocks=req.prompt_blocks, gen_blocks=0,
-            gen_tokens=0, denoise_steps=0, finished_eos=False,
+            gen_tokens=0, denoise_steps=0, finish_reason="length",
             admitted_tick=self.stats.ticks,
-            completed_tick=self.stats.ticks)
+            completed_tick=self.stats.ticks, params=req.params)
 
     # ------------------------------------------------------------- API
-    def submit(self, prompt: np.ndarray, prompt_blocks: int, rng, *,
-               max_new_blocks: int | None = None) -> int:
+    def submit(self, prompt: np.ndarray, prompt_blocks: int, rng=None, *,
+               params: SamplingParams | None = None,
+               max_new_blocks: int | None = _UNSET) -> int:
         """Queue a request; returns its uid (completions carry it).
+
+        ``params`` carries every per-request decode knob (defaults to
+        the pool's ``GenerationConfig`` sampling fields); the legacy
+        ``max_new_blocks=`` keyword overrides the params' budget.  An
+        explicit ``rng`` key always wins (so batch drivers keep their
+        per-row key streams and static/continuous parity regardless of
+        params); with ``rng`` omitted, ``params.seed`` derives the key
+        — deterministic replay for a front end that cannot thread jax
+        keys.
 
         The prompt is trimmed to its true ``prompt_blocks`` blocks:
         batch-padding blocks beyond that never influence decoding (the
@@ -534,13 +614,21 @@ class SlotScheduler:
         assert prompt.ndim == 1 and prompt.shape[0] % bsz == 0
         assert 1 <= prompt_blocks <= self.n_blocks_total
         assert prompt_blocks * bsz <= prompt.shape[0]
+        if params is None:
+            params = self.default_params
+        if max_new_blocks is not _UNSET:
+            params = params.replace(max_new_blocks=max_new_blocks)
+        if rng is None:
+            if params.seed is None:
+                raise ValueError("submit needs an rng key or params.seed")
+            rng = jax.random.PRNGKey(params.seed)
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(Request(uid=uid,
                                    prompt=prompt[:prompt_blocks * bsz],
                                    prompt_blocks=prompt_blocks,
                                    rng=jnp.asarray(rng),
-                                   max_new_blocks=max_new_blocks))
+                                   params=params))
         return uid
 
     @property
@@ -671,8 +759,14 @@ class SlotScheduler:
     def step(self, params) -> list[Completion]:
         """One scheduler tick: admit -> advance -> evict.
 
-        Returns the completions harvested this tick (possibly empty).
+        ``params`` are the *model weights* (the per-request decode
+        parameters ride on each submitted request).  Returns the
+        completions harvested this tick (possibly empty).
         """
+        if isinstance(params, SamplingParams):
+            raise TypeError(
+                "step(params=) takes model weights; per-request "
+                "SamplingParams belong on submit(..., params=...)")
         # ---- admit queued requests into free slots -------------------
         out: list[Completion] = []
         for slot in range(self.n_slots):
@@ -680,8 +774,8 @@ class SlotScheduler:
                 continue
             req = self._queue[0]
             budget = self.n_blocks_total - req.prompt_blocks
-            if req.max_new_blocks is not None:
-                budget = min(budget, req.max_new_blocks)
+            if req.params.max_new_blocks is not None:
+                budget = min(budget, req.params.max_new_blocks)
             if budget <= 0:
                 # nothing to decode (prompt fills the cache / zero block
                 # budget) — complete immediately, never touch a slot
@@ -705,7 +799,8 @@ class SlotScheduler:
                     params, self._state, jnp.int32(slot),
                     req.prompt[None],
                     jnp.asarray([req.prompt_blocks], jnp.int32),
-                    req.rng, jnp.int32(limit), None)
+                    req.rng, jnp.int32(limit),
+                    self._samp_scalars(req.params), None)
             self._queue.popleft()
             self._slot_req[slot] = req
             self._slot_admit_tick[slot] = self.stats.ticks
@@ -746,18 +841,21 @@ class SlotScheduler:
             lo, hi = req.prompt_blocks * bsz, \
                 (req.prompt_blocks + gen_blocks) * bsz
             # serve-stats count tokens up to and including the first
-            # EOS: the rest of an EOS block is padding, not output
+            # EOS (the *request's* stop token): the rest of an EOS
+            # block is padding, not output
+            eos_id = req.params.eos_id
             gen_tokens = int(decoding.count_gen_tokens(
                 tokens[None], [req.prompt_blocks], [gen_blocks],
-                eos_id=self.eos_id, block_size=bsz)[0])
+                eos_id=eos_id, block_size=bsz)[0])
+            hit_eos = bool((tokens[lo:hi] == eos_id).any())
             comp = Completion(
                 uid=req.uid, tokens=tokens, steps=steps,
                 prompt_blocks=req.prompt_blocks, gen_blocks=gen_blocks,
                 gen_tokens=gen_tokens,
                 denoise_steps=int(self._state.n_denoise[slot]),
-                finished_eos=bool((tokens[lo:hi] == self.eos_id).any()),
+                finish_reason="eos" if hit_eos else "length",
                 admitted_tick=self._slot_admit_tick[slot],
-                completed_tick=self.stats.ticks)
+                completed_tick=self.stats.ticks, params=req.params)
             out.append(comp)
             self._slot_req[slot] = None
             evicted.append(slot)

@@ -1,0 +1,351 @@
+"""Per-request SamplingParams: one slot pool serving mixed decode
+configurations.
+
+Pins the request-API redesign contracts:
+  * byte-parity — every row of a mixed-params batch (different τ,
+    temperature, mode, block budgets) is bit-identical to the same
+    request in a homogeneous run, across dense / paged /
+    paged+prefix-cache layouts (the acceptance criterion);
+  * zero retraces — the pool's jitted advance compiles once and serves
+    any parameter mix (params are traced per-row data, never statics);
+  * params never touch prompt KV — mixed-τ requests on one prompt
+    share prefix pages exactly like identical requests;
+  * per-request stop token / seed / budget semantics, finish_reason,
+    and admit→finish latency plumbing through Completion /
+    RequestOutput / EngineStats.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decoding
+from repro.models.config import ModelConfig
+from repro.models.model import BlockDiffLM
+from repro.serving.api import (GenerationConfig, RequestOutput,
+                               SamplingParams)
+from repro.serving.engine import EngineStats, RolloutEngine
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.server import ModelServer
+
+CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=128, block_size=8,
+                  attn_impl="structured")
+BSZ = CFG.block_size
+MAX_LEN = 48
+K = MAX_LEN // BSZ
+
+# >= 3 distinct configurations: τ, temperature, mode and block budgets
+# all differ (the acceptance-criterion mix)
+MIX = [
+    SamplingParams(tau=0.5, temperature=1.0, max_new_blocks=2),
+    SamplingParams(tau=0.9, temperature=0.0, max_new_blocks=None),
+    SamplingParams(tau=0.99, temperature=1.0, max_new_blocks=3),
+    SamplingParams(mode="static", n_steps=2, temperature=1.0,
+                   max_new_blocks=2),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = BlockDiffLM(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (4, 16), 4, 100))
+    pblocks = np.array([2, 1, 2, 1], np.int32)
+    return model, params, prompt, pblocks
+
+
+def _submit_mix(sched, prompt, pblocks, keys):
+    """Round-robin the MIX configs over 8 requests; returns uid->cfg idx."""
+    owner = {}
+    for i in range(8):
+        uid = sched.submit(prompt[i % 4], int(pblocks[i % 4]), keys[i],
+                           params=MIX[i % len(MIX)])
+        owner[uid] = i
+    return owner
+
+
+def _reference_rows(model, params, prompt, pblocks, keys):
+    """Homogeneous ground truth: for each config, run the rows that use
+    it as one one-shot generate with plain scalar parameters."""
+    ref = {}
+    for ci, sp in enumerate(MIX):
+        rows = [i for i in range(8) if i % len(MIX) == ci]
+        toks = np.stack([prompt[i % 4] for i in rows])
+        pb = np.array([pblocks[i % 4] for i in rows], np.int32)
+        limit = None
+        if sp.max_new_blocks is not None:
+            limit = np.minimum(K, pb + sp.max_new_blocks)
+        gen = decoding.generate(
+            model, params, jnp.asarray(toks), jnp.asarray(pb),
+            jnp.stack([keys[i] for i in rows]), max_len=MAX_LEN, s_max=4,
+            mode=sp.mode, tau=sp.tau, n_steps=sp.n_steps,
+            temperature=sp.temperature, eos_id=sp.eos_id, limit=limit)
+        for j, i in enumerate(rows):
+            ref[i] = (np.asarray(gen["tokens"][j]),
+                      np.asarray(gen["steps"][j]),
+                      int(gen["gen_blocks"][j]),
+                      int(gen["denoise_steps"][j]))
+    return ref
+
+
+def test_mixed_params_byte_parity_all_layouts(setup):
+    """Acceptance criterion: a pool serving >= 3 distinct SamplingParams
+    is byte-identical per row to homogeneous single-config runs, on
+    dense, paged, and paged+prefix-cache layouts."""
+    model, params, prompt, pblocks = setup
+    keys = jax.random.split(jax.random.PRNGKey(3), 8)
+    ref = _reference_rows(model, params, prompt, pblocks, keys)
+    for kw in [dict(cache="dense"),
+               dict(cache="paged", prefix_cache=False),
+               dict(cache="paged", prefix_cache=True)]:
+        sched = SlotScheduler(model, n_slots=3, max_len=MAX_LEN, s_max=4,
+                              eos_id=1, **kw)
+        owner = _submit_mix(sched, prompt, pblocks, keys)
+        comps = {c.uid: c for c in sched.run(params)}
+        assert sorted(comps) == sorted(owner)
+        for uid, c in comps.items():
+            toks, steps, gb, dn = ref[owner[uid]]
+            assert c.gen_blocks == gb, kw
+            assert c.denoise_steps == dn, kw
+            hi = (c.prompt_blocks + c.gen_blocks) * BSZ
+            np.testing.assert_array_equal(c.tokens[:hi], toks[:hi])
+            np.testing.assert_array_equal(c.steps[:hi], steps[:hi])
+
+
+def test_mixed_params_zero_retrace(setup):
+    """Acceptance criterion: after warmup, arbitrary parameter mixes
+    reuse the single compiled advance — the trace counter stays at 1
+    (parameters are per-row traced data, not jit statics)."""
+    model, params, prompt, pblocks = setup
+    sched = SlotScheduler(model, n_slots=3, max_len=MAX_LEN, s_max=4,
+                          cache="paged")
+    keys = jax.random.split(jax.random.PRNGKey(5), 9)
+    # warmup: one vanilla request pays the one and only trace
+    sched.submit(prompt[0], int(pblocks[0]), keys[8])
+    list(sched.run(params))
+    assert sched.n_advance_traces == 1
+    _submit_mix(sched, prompt, pblocks, keys)
+    list(sched.run(params))
+    assert sched.n_advance_traces == 1      # zero retraces for the mix
+
+
+def test_params_never_invalidate_prefix_sharing(setup):
+    """Requests with different SamplingParams share prompt pages exactly
+    like identical ones: params shape decoding only, never prompt KV.
+    Each mixed-τ group member still matches its homogeneous run."""
+    model, params, prompt, pblocks = setup
+    taus = [0.5, 0.8, 0.9, 0.99]
+    keys = jax.random.split(jax.random.PRNGKey(11), len(taus))
+    sched = SlotScheduler(model, n_slots=4, max_len=MAX_LEN, s_max=4,
+                          cache="paged", prefix_cache=True)
+    for i, tau in enumerate(taus):
+        sched.submit(prompt[0], 2, keys[i],
+                     params=SamplingParams(tau=tau, temperature=1.0,
+                                           max_new_blocks=2))
+    comps = {c.uid: c for c in sched.run(params)}
+    s = sched.stats
+    # first member prefills both prompt blocks, every other τ-variant
+    # maps the same shared pages — zero extra prefill
+    assert s.prefix_miss_blocks == 2
+    assert s.prefix_hit_blocks == (len(taus) - 1) * 2
+    assert s.prefill_blocks == 2
+    for i, tau in enumerate(taus):
+        gen = decoding.generate(
+            model, params, jnp.asarray(prompt[:1]),
+            jnp.asarray(pblocks[:1]), keys[i][None], max_len=MAX_LEN,
+            s_max=4, mode="dynamic", tau=tau, temperature=1.0, eos_id=1,
+            limit=np.array([2 + 2], np.int32))
+        c = comps[i]
+        hi = (c.prompt_blocks + c.gen_blocks) * BSZ
+        np.testing.assert_array_equal(
+            c.tokens[:hi], np.asarray(gen["tokens"][0, :hi]))
+
+
+def test_engine_mixed_sampling_static_continuous_parity(setup):
+    """generate_ids(sampling=[...]) is token-identical between the
+    one-shot static path (per-row vectors in one jitted generate) and
+    the slot pool, for a mixed-params batch."""
+    model, params, prompt, pblocks = setup
+    sampling = [MIX[i % len(MIX)] for i in range(4)]
+    rng = jax.random.PRNGKey(19)
+    outs = {}
+    for mode in ["static", "continuous"]:
+        eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+            max_len=MAX_LEN, s_max=4, batching=mode, n_slots=3,
+            cache="paged" if mode == "continuous" else "dense"))
+        outs[mode] = eng.generate_ids(prompt, pblocks, rng,
+                                      sampling=sampling)
+    a, b = outs["static"], outs["continuous"]
+    for k in ["gen_blocks", "denoise_steps", "done", "prompt_blocks"]:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    for i in range(4):
+        hi = int((pblocks[i] + a["gen_blocks"][i]) * BSZ)
+        np.testing.assert_array_equal(np.asarray(a["tokens"][i, :hi]),
+                                      np.asarray(b["tokens"][i, :hi]))
+        np.testing.assert_array_equal(np.asarray(a["steps"][i, :hi]),
+                                      np.asarray(b["steps"][i, :hi]))
+
+
+def test_per_request_eos_and_finish_reason(setup):
+    """eos_id=-1 disables EOS stopping (the row runs its full budget,
+    finish_reason 'length'); a default row's finish_reason matches
+    whether its generated region actually contains the stop token."""
+    model, params, prompt, pblocks = setup
+    sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
+                          temperature=1.0, tau=0.6)
+    keys = jax.random.split(jax.random.PRNGKey(23), 2)
+    u_noeos = sched.submit(prompt[0], 2, keys[0],
+                           params=SamplingParams(eos_id=-1,
+                                                 temperature=1.0,
+                                                 tau=0.6,
+                                                 max_new_blocks=3))
+    u_def = sched.submit(prompt[0], 2, keys[1])
+    comps = {c.uid: c for c in sched.run(params)}
+    c = comps[u_noeos]
+    assert c.gen_blocks == 3                 # ran the whole budget
+    assert c.finish_reason == "length" and not c.finished_eos
+    assert c.gen_tokens == 3 * BSZ           # -1 never cuts the count
+    d = comps[u_def]
+    region = d.tokens[d.prompt_blocks * BSZ:
+                      (d.prompt_blocks + d.gen_blocks) * BSZ]
+    assert d.finish_reason == ("eos" if (region == 1).any() else "length")
+    assert d.params.eos_id == 1              # pool default params applied
+    for comp in comps.values():
+        assert comp.latency_ticks == \
+            comp.completed_tick - comp.admitted_tick >= 0
+
+
+def test_per_request_seed_deterministic(setup):
+    """params.seed pins the request's rng: no key argument needed, and
+    identical (prompt, params) submissions produce identical bytes."""
+    model, params, prompt, pblocks = setup
+    sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
+                          temperature=1.0, tau=0.6)
+    sp = SamplingParams(seed=42, temperature=1.0, tau=0.6,
+                        max_new_blocks=2)
+    u0 = sched.submit(prompt[0], 2, params=sp)
+    u1 = sched.submit(prompt[0], 2, params=sp)
+    # an explicit key always wins over the seed — batch drivers keep
+    # their per-row streams (static/continuous parity) even when the
+    # request params happen to carry a seed
+    key = jax.random.PRNGKey(77)
+    u2 = sched.submit(prompt[0], 2, key, params=sp)
+    u3 = sched.submit(prompt[0], 2, key,
+                      params=sp.replace(seed=None))
+    comps = {c.uid: c for c in sched.run(params)}
+    np.testing.assert_array_equal(comps[u0].tokens, comps[u1].tokens)
+    np.testing.assert_array_equal(comps[u0].steps, comps[u1].steps)
+    np.testing.assert_array_equal(comps[u2].tokens, comps[u3].tokens)
+    with pytest.raises(ValueError, match="rng"):
+        sched.submit(prompt[0], 2)           # no key, no seed
+
+
+def test_submit_legacy_budget_override_and_zero_budget(setup):
+    """The legacy max_new_blocks= keyword overrides the params' budget;
+    an explicit 0 completes immediately with finish_reason 'length'."""
+    model, params, prompt, pblocks = setup
+    sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3)
+    keys = jax.random.split(jax.random.PRNGKey(29), 2)
+    u0 = sched.submit(prompt[0], 2, keys[0],
+                      params=SamplingParams(max_new_blocks=4, eos_id=-1),
+                      max_new_blocks=1)
+    u1 = sched.submit(prompt[0], 2, keys[1],
+                      params=SamplingParams(tau=0.3), max_new_blocks=0)
+    comps = {c.uid: c for c in sched.run(params)}
+    assert comps[u0].gen_blocks == 1         # keyword won
+    assert comps[u1].gen_blocks == 0
+    assert comps[u1].finish_reason == "length"
+    assert comps[u1].params.tau == 0.3       # rest of params preserved
+
+
+def test_engine_stream_outputs_and_latency_stats(setup):
+    """stream() yields structured RequestOutput records; EngineStats
+    aggregates admit->finish latencies into p50/p95."""
+    model, params, prompt, pblocks = setup
+    eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+        max_len=MAX_LEN, s_max=3, tau=0.6, temperature=1.0,
+        batching="continuous", n_slots=2))
+    uids = [eng.submit(f"q{i}",
+                       params=SamplingParams(tau=0.5 + 0.1 * i,
+                                             temperature=1.0,
+                                             max_new_blocks=2))
+            for i in range(3)]
+    outs = {o.uid: o for o in eng.stream()}
+    assert sorted(outs) == sorted(uids)
+    for uid, o in outs.items():
+        assert isinstance(o, RequestOutput)
+        assert o.finish_reason in ("eos", "length")
+        assert o.latency_ticks >= 0
+        assert o.gen_tokens >= len(o.token_ids)  # ids trimmed at EOS
+    s = eng.stats
+    assert len(s.latencies) == 3
+    assert 0 <= s.latency_p50 <= s.latency_p95
+    # continuous generate_ids also feeds the latency percentiles
+    eng.generate_ids(prompt, pblocks, jax.random.PRNGKey(2))
+    assert len(eng.stats.latencies) == 7
+
+
+def test_scheduler_config_collapse(setup):
+    """One GenerationConfig object flows engine -> scheduler (no field
+    mirror); keyword overrides still patch individual fields."""
+    model, params, _, _ = setup
+    cfg = GenerationConfig(max_len=MAX_LEN, n_slots=2, tau=0.7,
+                           temperature=1.0, mode="static", n_steps=4,
+                           eos_id=3)
+    sched = SlotScheduler(model, cfg)
+    assert sched.n_slots == 2 and sched.max_len == MAX_LEN
+    assert sched.default_params == SamplingParams(
+        tau=0.7, temperature=1.0, mode="static", n_steps=4, eos_id=3)
+    over = SlotScheduler(model, cfg, n_slots=3, tau=0.9)
+    assert over.n_slots == 3 and over.default_params.tau == 0.9
+    assert cfg.n_slots == 2                  # original untouched
+    eng = RolloutEngine(model, ModelServer(params), cfg)
+    assert eng.scheduler.gen_cfg is cfg      # handed over whole
+
+
+def test_group_rollouts_per_group_tau(setup):
+    """generate_group_ids(sampling=[per-prompt params]) — the
+    DiPOConfig.group_taus lever: each group's G members decode with
+    their prompt's τ, byte-identical to a homogeneous run of that τ
+    (same rng layout), while prompt pages still dedupe per group."""
+    model, params, prompt, pblocks = setup
+    P, G = 2, 2
+    toks, pb = prompt[:P], pblocks[:P]
+    rng = jax.random.PRNGKey(31)
+    eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+        max_len=MAX_LEN, s_max=3, temperature=1.0,
+        batching="continuous", n_slots=4, cache="paged"))
+    per_group = [eng.gen_cfg.sampling(tau=t) for t in (0.5, 0.95)]
+    mixed = eng.generate_group_ids(toks, pb, rng, G, sampling=per_group)
+    assert eng.stats.prefix_hit_blocks == (G - 1) * int(pb.sum())
+    for gi, sp in enumerate(per_group):
+        eng_h = RolloutEngine(model, ModelServer(params),
+                              GenerationConfig(
+            max_len=MAX_LEN, s_max=3, temperature=1.0,
+            batching="continuous", n_slots=4, cache="paged"))
+        homo = eng_h.generate_group_ids(toks, pb, rng, G, sampling=sp)
+        for r in range(gi * G, gi * G + G):
+            hi = int((mixed["prompt_blocks"][r]
+                      + mixed["gen_blocks"][r]) * BSZ)
+            np.testing.assert_array_equal(
+                np.asarray(mixed["tokens"][r, :hi]),
+                np.asarray(homo["tokens"][r, :hi]))
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="mode"):
+        SamplingParams(mode="greedy")
+    with pytest.raises(ValueError, match="n_steps"):
+        SamplingParams(n_steps=0)
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="max_new_blocks"):
+        SamplingParams(max_new_blocks=-1)
+    sp = SamplingParams(tau=0.5)
+    assert sp.replace(tau=0.7).tau == 0.7 and sp.tau == 0.5
+    assert dataclasses.is_dataclass(sp) and sp.dynamic

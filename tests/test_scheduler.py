@@ -190,9 +190,13 @@ def test_stream_abandoned_midway_keeps_undelivered(setup):
     keys = jax.random.split(jax.random.PRNGKey(2), 3)
     uids = {eng.submit(f"q{i}", keys[i]) for i in range(3)}
     first = next(eng.stream())          # abandon the generator here
-    rest = dict(eng.stream())
-    assert {first[0], *rest} == uids
+    rest = {out.uid: out for out in eng.stream()}
+    assert {first.uid, *rest} == uids
     assert len(rest) == 2
+    for out in rest.values():           # structured streaming records
+        assert out.finish_reason in ("eos", "length")
+        assert out.latency_ticks == out.completed_tick - out.admitted_tick
+        assert isinstance(out.text, str)
 
 
 def test_zero_budget_done_flag_matches_static(setup):
@@ -222,8 +226,8 @@ def test_stream_request_survives_batch_drain(setup):
         batching="continuous", n_slots=2))
     uid = eng.submit("hi", jax.random.PRNGKey(0))
     eng.generate_ids(prompt, pblocks, jax.random.PRNGKey(1))
-    got = dict(eng.stream())
-    assert uid in got and isinstance(got[uid], str)
+    got = {out.uid: out for out in eng.stream()}
+    assert uid in got and isinstance(got[uid].text, str)
 
 
 def _drive_interleaved(model, params, sched, prompt, pblocks, keys,
