@@ -1,0 +1,92 @@
+"""Microbench: paged-decode attention — gathered fallback vs in-place.
+
+Raw-kernel counterpart of serve_bench §5 (no model, no scheduler): one
+decode step of current-block queries against a shared KV page pool, at
+growing pool widths.  Two numbers per shape:
+
+* ``us_per_call`` — wall-clock of the jitted layout (CPU caveat: the
+  Pallas path runs under ``interpret=True`` off-TPU, so its CPU time is
+  a correctness harness, not the speed story — identical caveat to
+  kernel_bench's interpret-mode rows);
+* ``transient_kv_bytes`` — the per-call K/V copy the layout
+  materializes outside the resident pool.  This is the structurally
+  meaningful column: the gather scales with slots x K*bsz while the
+  in-place kernel stays at 0, which is the capacity headroom the
+  page-aware kernel buys at serving scale.
+
+Max-abs deviation between the two layouts is reported per shape
+(f32 flash-vs-plain-softmax rounding; token-level byte parity is
+pinned in tests/test_paged_attn.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+
+
+def _setup(key, *, B, K, Hkv, Dk, Dv, bsz):
+    """Random pool + a ragged table (per-row mapped block counts drawn
+    uniformly from [1, K], trailing blocks -1), limits mid-run."""
+    P = B * K + 1
+    ks = jax.random.split(key, 5)
+    cache = A.PagedAttnCache(
+        k=jax.random.normal(ks[0], (P, bsz, Hkv, Dk), jnp.float32),
+        v=jax.random.normal(ks[1], (P, bsz, Hkv, Dv), jnp.float32),
+        pos=jnp.asarray(
+            np.arange(P * bsz).reshape(P, bsz) % (K * bsz), jnp.int32))
+    rs = np.random.RandomState(0)
+    table = np.full((B, K), -1, np.int64)
+    perm = rs.permutation(P - 1) + 1          # never the null page
+    t = 0
+    for b in range(B):
+        kb = rs.randint(1, K + 1)
+        table[b, :kb] = perm[t:t + kb]
+        t += kb
+    blk = rs.randint(1, K, (B,))
+    positions = blk[:, None] * bsz + np.arange(bsz)[None, :]
+    limit = blk * bsz
+    k_self = jax.random.normal(ks[2], (B, bsz, Hkv, Dk), jnp.float32)
+    v_self = jax.random.normal(ks[3], (B, bsz, Hkv, Dv), jnp.float32)
+    q = jax.random.normal(ks[4], (B, bsz, 4 * Hkv, Dk), jnp.float32)
+    return (cache, jnp.asarray(table, jnp.int32), k_self, v_self,
+            jnp.asarray(positions, jnp.int32),
+            jnp.asarray(limit, jnp.int32), q)
+
+
+def run(quick: bool = True) -> list[str]:
+    from .common import timed
+    rows = ["kernel,slots,K,bsz,Hkv,Dk,us_per_call,transient_kv_bytes,"
+            "max_abs_dev"]
+    shapes = [dict(B=8, K=8, Hkv=2, Dk=32, Dv=32, bsz=16)]
+    if not quick:
+        shapes += [dict(B=16, K=16, Hkv=2, Dk=64, Dv=64, bsz=32),
+                   dict(B=8, K=16, Hkv=1, Dk=72, Dv=64, bsz=32)]  # MLA
+    for sh in shapes:
+        args = _setup(jax.random.PRNGKey(0), **sh)
+        cache, table = args[0], args[1]
+        kw = dict(scale=sh["Dk"] ** -0.5, softcap=None, window=None)
+        outs = {}
+        for kernel in ("ref", "pallas"):
+            layout = A.resolve_kv_layout(cache, kernel)
+            fn = jax.jit(lambda q, c, t, ksf, vsf, pos, lim, _l=layout:
+                         _l.attend(q, ksf, vsf, pos, c, block_table=t,
+                                   cache_limit=lim, **kw))
+            cache_, table_, ksf, vsf, pos, lim, q = args
+            t = timed(lambda: fn(q, cache_, table_, ksf, vsf, pos, lim),
+                      warmup=1, iters=3)
+            outs[kernel] = fn(q, cache_, table_, ksf, vsf, pos, lim)
+            tb = A.transient_kv_bytes(cache, sh["B"], sh["K"], kernel)
+            dev = 0.0 if kernel == "ref" else float(
+                jnp.abs(outs["pallas"] - outs["ref"]).max())
+            rows.append(
+                f"{kernel},{sh['B']},{sh['K']},{sh['bsz']},{sh['Hkv']},"
+                f"{sh['Dk']},{t * 1e6:.0f},{tb},{dev:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -25,10 +25,12 @@ def main() -> None:
     quick = not args.full
 
     from . import (fig6_breakdown, fig7_sizes, fig8_tau_sweep,
-                   kernel_bench, serve_bench, table1_eval)
+                   kernel_bench, paged_attn_bench, serve_bench,
+                   table1_eval)
 
     benches = {
         "kernel_bench": kernel_bench.run,
+        "paged_attn_bench": paged_attn_bench.run,
         "fig7_sizes": fig7_sizes.run,
         "fig6_breakdown": fig6_breakdown.run,
         "table1_eval": table1_eval.run,

@@ -41,6 +41,18 @@ a homogeneous pool running only its configuration (asserted per row).
 Reported: throughput, admit→finish latency p50/p95 in ticks, and the
 trace count — the "no retrace, no rebuild" property the old
 one-engine-per-τ sweep paid for.
+
+Section 5 (decode KV layout: gather vs in-place): the same paged pools
+as §2 (equal-memory ragged workload) and §3 (G=8 group rollouts,
+prefix-shared pages) run once with ``kernel="ref"`` — ``paged_gather``
+materializes a dense-width K/V copy per layer per tick — and once with
+``kernel="pallas"`` — the page-aware kernel reads the pool in place.
+Tokens are byte-identical between the two (asserted; pinned in
+tests/test_paged_attn.py); the structurally meaningful number is
+``transient_kv_bytes`` — the per-tick K/V copy the layout pays, which
+drops to 0 in place (off-TPU the kernel runs interpreted, so CPU
+wall-clock is a correctness harness, not the speed story — same caveat
+as kernel_bench).
 """
 
 from __future__ import annotations
@@ -226,6 +238,62 @@ def _mixed_params(model, params, toks, blocks, max_len):
             f"{sched.n_advance_traces}"]
 
 
+def _kernel_layouts(model, params, tok, toks, blocks, max_len, budget,
+                    *, n_prompts, G):
+    """§5: gathered fallback vs in-place kernel on the §2 equal-memory
+    workload and the §3 G-group workload; byte-parity asserted, decode
+    wall/tick latency and the per-tick transient KV copy reported."""
+    cfg = model.cfg
+    K = max_len // cfg.block_size
+    gtoks, gblocks = _ragged_workload(tok, cfg.block_size, n_prompts)
+    gkeys = jax.random.split(jax.random.PRNGKey(5), n_prompts * G)
+    keys = jax.random.split(jax.random.PRNGKey(3), toks.shape[0])
+    rows = []
+    for workload in ("equal_mem", f"group_G{G}"):
+        ref = None
+        for kernel in ("ref", "pallas"):
+            if workload == "equal_mem":
+                sched = SlotScheduler(
+                    model, n_slots=12, max_len=max_len, s_max=4,
+                    mode="dynamic", tau=0.7, temperature=1.0, eos_id=1,
+                    cache="paged", n_pages=4 * K + 1, prefix_cache=False,
+                    kernel=kernel)
+                submit = [(toks[i], int(blocks[i]), keys[i])
+                          for i in range(toks.shape[0])]
+            else:
+                n_slots = 2 * G
+                sched = SlotScheduler(
+                    model, n_slots=n_slots, max_len=max_len, s_max=4,
+                    mode="dynamic", tau=0.7, temperature=1.0, eos_id=1,
+                    cache="paged", kernel=kernel,
+                    n_pages=n_slots * (int(gblocks.max()) + budget) + 1)
+                submit = [(gtoks[i // G], int(gblocks[i // G]), gkeys[i])
+                          for i in range(n_prompts * G)]
+            # warm the jit/kernel caches, then measure a fresh drain
+            for t, b, k in submit:
+                sched.submit(t, b, k, max_new_blocks=budget)
+            list(sched.run(params))
+            sched.stats = type(sched.stats)()
+            for t, b, k in submit:
+                sched.submit(t, b, k, max_new_blocks=budget)
+            t0 = time.perf_counter()
+            comps = {c.uid: c for c in sched.run(params)}
+            dt = time.perf_counter() - t0
+            if ref is None:
+                ref = comps
+            else:   # layouts must agree token-for-token
+                for uid, c in ref.items():
+                    hi = (c.prompt_blocks + c.gen_blocks) * cfg.block_size
+                    np.testing.assert_array_equal(
+                        c.tokens[:hi], comps[uid].tokens[:hi])
+            s = sched.stats
+            rows.append(
+                f"{workload},{kernel},{len(comps)},{s.gen_tokens},"
+                f"{dt:.3f},{dt / max(s.ticks, 1) * 1e3:.1f},{s.ticks},"
+                f"{s.transient_kv_bytes}")
+    return rows
+
+
 def run(quick: bool = True) -> list[str]:
     from .common import bench_config, quick_sft
     cfg = bench_config()
@@ -268,6 +336,12 @@ def run(quick: bool = True) -> list[str]:
     rows.append("mix,requests,gen_tokens,wall_s,tok_per_s,ticks,"
                 "latency_p50,latency_p95,advance_traces")
     rows += _mixed_params(model, params, toks, blocks, max_len)
+
+    rows.append("workload,kernel,requests,gen_tokens,wall_s,ms_per_tick,"
+                "ticks,transient_kv_bytes")
+    rows += _kernel_layouts(model, params, tok, toks, blocks, max_len,
+                            budget, n_prompts=2 if quick else 4,
+                            G=8)
     return rows
 
 

@@ -165,7 +165,8 @@ def prefill(model, params, prompt_tokens, prompt_blocks, max_len: int, *,
 
 
 def prefill_suffix(model, params, suffix_tokens, start_block: jax.Array,
-                   caches, context_table, write_pages):
+                   caches, context_table, write_pages,
+                   kv_kernel: str = "ref"):
     """Suffix-only prefill: commit prompt blocks [start_block, ...) while
     reading the shared-prefix KV through ``context_table`` pages.
 
@@ -198,11 +199,13 @@ def prefill_suffix(model, params, suffix_tokens, start_block: jax.Array,
                                block=pos // cfg.block_size)
     return model.prefill_suffix(params, suffix_tokens, meta, caches,
                                 context_table=context_table,
-                                write_pages=write_pages)
+                                write_pages=write_pages,
+                                kv_kernel=kv_kernel)
 
 
 def denoise_block(model, params, caches, blk, rng, *, tau, temperature,
                   n_steps, dynamic, s_max: int, table=None,
+                  kv_kernel: str = "ref",
                   memory=None, memory_valid=None):
     """Denoise one block for every sequence.
 
@@ -240,6 +243,7 @@ def denoise_block(model, params, caches, blk, rng, *, tau, temperature,
         logits, _ = model.decode_step(params, ids, pos, caches,
                                       cache_limit=cache_limit,
                                       block_table=table,
+                                      kv_kernel=kv_kernel,
                                       memory=memory,
                                       memory_valid=memory_valid)
         lf = logits.astype(jnp.float32)
@@ -289,6 +293,7 @@ def denoise_block(model, params, caches, blk, rng, *, tau, temperature,
 
 
 def advance_block(model, params, st: GenState, *, s_max: int,
+                  kv_kernel: str = "ref",
                   memory=None, memory_valid=None) -> GenState:
     """Advance every sequence of ``st`` by exactly one block (jittable).
 
@@ -303,7 +308,11 @@ def advance_block(model, params, st: GenState, *, s_max: int,
 
     All sampling parameters come from the state's per-row vectors —
     ``s_max`` is the one static, so a single compiled instance serves
-    every mix of request configurations a pool can hold.
+    every mix of request configurations a pool can hold.  ``kv_kernel``
+    selects the decode KV layout (``"ref"`` = concat/gather fallback,
+    ``"pallas"`` = in-place page-aware kernel on paged caches); it is a
+    pool-level static like ``s_max``, never per-request data, so the
+    zero-retrace mixed-``SamplingParams`` invariant is untouched.
     """
     bsz = model.cfg.block_size
     B, L = st.tokens.shape
@@ -315,7 +324,8 @@ def advance_block(model, params, st: GenState, *, s_max: int,
         model, params, st.caches, blk, st.rng, tau=st.tau,
         temperature=st.temperature, n_steps=st.n_steps,
         dynamic=st.dynamic, s_max=s_max,
-        table=st.table, memory=memory, memory_valid=memory_valid)
+        table=st.table, kv_kernel=kv_kernel,
+        memory=memory, memory_valid=memory_valid)
     # frozen sequences re-commit their existing block (idempotent)
     old_ids = jnp.take_along_axis(st.tokens, pos, axis=1)
     old_steps = jnp.take_along_axis(st.steps, pos, axis=1)
@@ -325,6 +335,7 @@ def advance_block(model, params, st: GenState, *, s_max: int,
     _, caches = model.decode_step(params, ids, pos, st.caches,
                                   cache_limit=blk * bsz,
                                   block_table=st.table, write=True,
+                                  kv_kernel=kv_kernel,
                                   memory=memory,
                                   memory_valid=memory_valid)
     tokens = st.tokens.at[rows, pos].set(ids)

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spot kernels (the paper's FlexAttention role on TPU):
+#   block_diff_attn.py — masked-pass flash attention under the
+#       block-diffusion visibility predicate (tile-skipping via ops.
+#       build_tile_map); validated against ref.mha_reference.
+#   paged_attn.py      — decode-mode paged attention that reads the
+#       serving KV page pool in place through the per-slot block table
+#       (scalar-prefetch gather); validated against the gathered
+#       fallback in models.attention (tests/test_paged_attn.py).
+# Both auto-run interpret=True off-TPU so CPU CI exercises the real
+# kernel paths.  ops.py dispatches the masked-pass implementations.

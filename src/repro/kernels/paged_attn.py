@@ -1,0 +1,229 @@
+"""Pallas TPU paged-decode attention: read the KV page pool in place.
+
+The decode-mode counterpart of ``block_diff_attn.py``: one current-block
+query tile per sequence attends to its committed KV *directly in the
+shared page pool* (``models.attention.PagedAttnCache``).  The per-slot
+block table rides in as a **scalar-prefetch** operand, so each grid
+step's BlockSpec index map resolves "which page does sequence b's block
+j live in" *before* the step's DMA is issued — the kernel gathers pages
+page-by-page inside the grid instead of materializing the dense-width
+``paged_gather`` copy (slots x K*bsz keys per layer per step) that the
+gathered fallback pays.
+
+Grid: ``(B, Hkv, K + 1)`` with the key axis innermost (sequential on
+TPU, accumulating online-softmax statistics in scratch).  The kv-head
+grid axis folds each GQA group's queries into one (group*n, Dk) tile,
+so a page is streamed exactly once per kv head per step — never once
+per query head (for MLA's latent MQA that is a single fetch for all H
+heads):
+
+* steps ``j < K`` load page ``table[b, j]`` from the pool (table entry
+  -1 — no page — loads the null page 0 and is masked invalid);
+* step ``j == K`` attends the block's own fresh K/V (the bidirectional
+  self-block of blockwise-dLLM decode).
+
+Masking reproduces ``models.attention`` decode semantics byte-for-byte:
+a pool key is visible iff its block has a page (``table >= 0``), the
+slot is filled (``pos >= 0``) and committed for this sequence
+(``pos < cache_limit[b]``); self keys are always visible; a sliding
+window ``(q_pos - k_pos) < window`` applies to both.  Scores accumulate
+in f32 with the same scale -> softcap -> mask order as the reference.
+
+Off-TPU the kernel auto-selects ``interpret=True`` so CPU CI runs the
+*real* kernel path (mirroring how ``block_diff_attn`` is validated
+against ``ref.mha_reference``).
+
+Memory plan (per grid step): q tile (n, Dk), one page of k/v
+((bsz, Dk)/(bsz, Dv)) + its (1, bsz) positions, f32 scratch acc
+(n, Dv) + running max / sum (n, 128 lanes).  VMEM is O(page), never
+O(sequence) — transient decode memory no longer scales with K.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF
+
+_LANES = 128
+
+
+def default_interpret() -> bool:
+    """Run compiled on TPU, interpreted everywhere else (CPU CI)."""
+    return jax.default_backend() != "tpu"
+
+
+def _tile_aligned(bsz: int, dk: int, dv: int) -> bool:
+    """Shapes the compiled Mosaic path is known to lower: the f32 min
+    tile is (8, 128), so sub-tile pages (small ``block_size`` configs,
+    non-128-multiple head dims) stay on interpret mode even on TPU
+    until compiled-mode tile padding lands (ROADMAP follow-up) —
+    correct everywhere, compiled only where safe."""
+    return bsz % 8 == 0 and dk % _LANES == 0 and dv % _LANES == 0
+
+
+def _kernel(table_ref, limit_ref, q_ref, kp_ref, vp_ref, pp_ref,
+            ks_ref, vs_ref, qp_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, softcap: float | None, window: int | None,
+            group: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)          # K + 1: pages then the self block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    is_self = j == nk - 1
+    # page id for this step (clamped read: the value is unused when
+    # is_self; the index map already redirected -1 to the null page)
+    t = table_ref[b, jnp.minimum(j, nk - 2)]
+    lim = limit_ref[b]
+
+    # all ``group`` query heads of this kv head ride one page fetch
+    q = q_ref[0, 0].astype(jnp.float32)               # (group*n, Dk)
+    k = jnp.where(is_self, ks_ref[0, 0], kp_ref[0, :, 0, :]) \
+        .astype(jnp.float32)                          # (bsz, Dk)
+    v = jnp.where(is_self, vs_ref[0, 0], vp_ref[0, :, 0, :]) \
+        .astype(jnp.float32)                          # (bsz, Dv)
+    q_pos = qp_ref[0:1, :]                            # (1, n)
+    k_pos = jnp.where(is_self, q_pos, pp_ref[0:1, :])  # (1, bsz)
+    # pool keys: block mapped & slot filled & committed for this row;
+    # self keys: always visible (the bidirectional self block)
+    page_ok = (t >= 0) & (k_pos >= 0) & (k_pos < lim)
+    valid = jnp.where(is_self, jnp.ones_like(page_ok), page_ok)
+    if window is not None:
+        valid = valid & ((q_pos.T - k_pos) < window)   # (n, bsz)
+        valid = jnp.tile(valid, (group, 1))            # (group*n, bsz)
+    else:
+        valid = jnp.broadcast_to(valid, (q.shape[0], k.shape[0]))
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (group*n, bsz)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                              # (group*n, 1)
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                    # rescale old stats
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)                       # exp(NEG-NEG)=1 trap
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pos_pages: jax.Array,
+                           table: jax.Array, k_self: jax.Array,
+                           v_self: jax.Array, positions: jax.Array,
+                           cache_limit: jax.Array, *,
+                           scale: float,
+                           softcap: float | None = None,
+                           window: int | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """Decode attention over (pool pages ++ self block), in place.
+
+    q          (B, n, H, Dk)   current-block queries (n == page size)
+    k_pages    (P, bsz, Hkv, Dk) shared pool, rotated keys
+    v_pages    (P, bsz, Hkv, Dv)
+    pos_pages  (P, bsz) int32  absolute position ids, -1 = empty slot
+    table      (B, K) int32    block -> page, -1 = no page
+    k_self     (B, n, Hkv, Dk) the block's own fresh keys
+    v_self     (B, n, Hkv, Dv)
+    positions  (B, n) int32    the block's absolute positions
+    cache_limit (B,) int32     pool keys visible iff pos < limit[b]
+
+    Returns (B, n, H, Dv) in q's dtype.  ``interpret=None`` auto-selects
+    interpret mode off-TPU — and on TPU whenever the page shapes fall
+    below the compiled path's (8, 128) f32 tile (``_tile_aligned``), so
+    the kernel is correct everywhere and compiled only where safe.
+    """
+    B, n, H, Dk = q.shape
+    P, bsz, Hkv, _ = k_pages.shape
+    Dv = v_pages.shape[-1]
+    K = table.shape[1]
+    assert n == bsz, (n, bsz)     # decode block == page granularity
+    assert H % Hkv == 0
+    group = H // Hkv
+    if interpret is None:
+        interpret = default_interpret() or not _tile_aligned(bsz, Dk, Dv)
+
+    # grid iterates KV heads, not query heads: head h attends kv head
+    # h // group, so the whole group's queries are folded into one
+    # (group*n, Dk) tile and every page is streamed once per kv head
+    # per step (a per-q-head grid would re-DMA each page `group` times
+    # — H times for MLA's MQA form)
+    qh = q.transpose(0, 2, 1, 3).reshape(B, Hkv, group * n, Dk)
+    ksh = k_self.transpose(0, 2, 1, 3)    # (B, Hkv, n, Dk)
+    vsh = v_self.transpose(0, 2, 1, 3)
+
+    # index maps see (grid indices..., *scalar prefetch refs); the page
+    # maps read the block table so each step DMAs exactly one page
+    def q_map(b, h, j, tr, lr):
+        return (b, h, 0, 0)
+
+    def page_map(b, h, j, tr, lr):
+        page = tr[b, jnp.minimum(j, K - 1)]
+        return (jnp.maximum(page, 0), 0, h, 0)
+
+    def pos_map(b, h, j, tr, lr):
+        page = tr[b, jnp.minimum(j, K - 1)]
+        return (jnp.maximum(page, 0), 0)
+
+    def self_map(b, h, j, tr, lr):
+        return (b, h, 0, 0)
+
+    def row_map(b, h, j, tr, lr):
+        return (b, 0)
+
+    kern = functools.partial(_kernel, scale=scale, softcap=softcap,
+                             window=window, group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, K + 1),
+        in_specs=[
+            pl.BlockSpec((1, 1, group * n, Dk), q_map),
+            pl.BlockSpec((1, bsz, 1, Dk), page_map),
+            pl.BlockSpec((1, bsz, 1, Dv), page_map),
+            pl.BlockSpec((1, bsz), pos_map),
+            pl.BlockSpec((1, 1, n, Dk), self_map),
+            pl.BlockSpec((1, 1, n, Dv), self_map),
+            pl.BlockSpec((1, n), row_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group * n, Dv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((group * n, Dv), jnp.float32),
+            pltpu.VMEM((group * n, _LANES), jnp.float32),
+            pltpu.VMEM((group * n, _LANES), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group * n, Dv), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), cache_limit.astype(jnp.int32),
+      qh, k_pages, v_pages, pos_pages, ksh, vsh,
+      positions.astype(jnp.int32))
+    return out.reshape(B, H, n, Dv).transpose(0, 2, 1, 3)

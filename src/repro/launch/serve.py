@@ -9,6 +9,11 @@ comma-separated list — requests round-robin over the values as
 per-request ``SamplingParams`` on ONE slot pool, exercising the
 request-granular decode path (no engine rebuild, no retrace per
 config).  A single value behaves as before.
+
+``--cache paged --kernel pallas`` serves the pool through the in-place
+page-aware decode kernel (``kernels.paged_attn``); the stats line then
+reports the per-tick transient KV copy (0 in place vs the gathered
+fallback's dense-width bytes).
 """
 
 from __future__ import annotations
@@ -46,6 +51,11 @@ def main():
                     help="KV layout: per-slot regions | shared page pool")
     ap.add_argument("--pages", type=int, default=None,
                     help="paged: pool size (default = dense-equivalent)")
+    ap.add_argument("--kernel", choices=["ref", "pallas"], default="ref",
+                    help="paged decode KV layout: gather pages into a "
+                         "dense-width copy per step (ref) or read the "
+                         "page pool in place (pallas; interpret-mode "
+                         "off-TPU)")
     ap.add_argument("--prefix-cache", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="paged: share committed prompt pages across "
@@ -78,7 +88,7 @@ def main():
         tau=args.tau[0], temperature=args.temperature[0],
         batching=args.batching, n_slots=args.slots,
         cache=args.cache, n_pages=args.pages,
-        prefix_cache=args.prefix_cache))
+        prefix_cache=args.prefix_cache, kernel=args.kernel))
     rng = random.Random(0)
     prompts = [sample_problem(rng, level=0).prompt
                for _ in range(args.requests)]
@@ -119,6 +129,10 @@ def main():
                  f"/p95 {s.latency_p95:.0f} ticks")
         if args.cache == "paged" and engine.scheduler.prefix is not None:
             line += f" | prefix-hit {s.prefix_hit_rate:.0%}"
+        if args.cache == "paged":
+            line += (f" | kernel {args.kernel} "
+                     f"(transient KV {s.transient_kv_bytes / 1024:.0f} "
+                     f"KiB/tick)")
         if mixed:
             line += (f" | {engine.scheduler.n_advance_traces} advance "
                      f"trace(s) across {args.requests} mixed requests")

@@ -13,16 +13,34 @@ KV caches store *rotated* keys with explicit position ids so sliding-window
 ring buffers and sequence-sharded caches need no extra bookkeeping:
 ``pos < 0`` marks unfilled slots.
 
-Two decode-cache layouts share the same attention math:
+Decode reads dispatch through one **KV-layout object**
+(``resolve_kv_layout``) — the strategy that decides how a layer's
+cached keys reach the attention math:
 
-* ``AttnCache``       — dense: every sequence owns a contiguous
-                        (S, ...) region (prefill, replay, one-shot
-                        generate, and the scheduler's ``cache="dense"``);
-* ``PagedAttnCache``  — a shared pool of block-sized pages addressed
-                        through a per-sequence block table (the
-                        scheduler's ``cache="paged"``), so cache memory
-                        scales with tokens actually held, not with
-                        worst-case sequence length per slot.
+* ``dense``     (``AttnCache``) — every sequence owns a contiguous
+                (S, ...) region (prefill, replay, one-shot generate,
+                and the scheduler's ``cache="dense"``); decode
+                concatenates (cache ++ self) and runs the masked
+                reference.
+* ``gathered``  (``PagedAttnCache``, ``kernel="ref"``) — the shared
+                page pool is gathered through the per-sequence block
+                table into a dense-width copy, then runs the *same*
+                concat path — the portable fallback, byte-identical to
+                ``dense`` by construction.
+* ``paged``     (``PagedAttnCache``, ``kernel="pallas"``) — the
+                ``kernels.paged_attn`` Pallas kernel reads the pool
+                **in place**, one page per grid step via the
+                scalar-prefetched block table: no dense-width K/V copy
+                is ever materialized, so transient decode memory stops
+                scaling with slots x K*bsz (off-TPU the kernel runs
+                under ``interpret=True``, so CPU CI exercises the real
+                path).
+
+All three layouts implement the same masking contract — null page 0,
+``pos = -1`` empty slots, per-row ``cache_limit``, sliding window, and
+the MLA latent-MQA form — and produce byte-identical decode tokens
+(tests/test_paged_attn.py).  ``transient_kv_bytes`` quantifies the
+per-step copy each layout pays (0 for the in-place kernel).
 """
 
 from __future__ import annotations
@@ -94,11 +112,12 @@ def paged_gather(cache: PagedAttnCache, table: jax.Array):
     blocks (table -1) read the null page with ``pos`` forced to -1, so
     the ordinary pos-validity mask hides them.
 
-    NOTE: this materializes a dense-width K/V copy per layer per decode
-    step, so *transient* decode memory still scales with slots x K*bsz
-    even though the resident pool is paged — a page-aware attention
-    kernel that reads the pool in place is the follow-up that removes
-    the copy (ROADMAP).
+    This materializes a dense-width K/V copy, so it survives only where
+    that is cheap or unavoidable: the ``kernel="ref"`` decode fallback
+    (portability / parity oracle) and the shared-prefix suffix prefill
+    (admission-time one-off whose gather width is just the hit prefix).
+    The per-step decode path reads the pool in place instead
+    (``kernels.paged_attn`` via ``resolve_kv_layout``).
     """
     B, K = table.shape
     idx = jnp.maximum(table, 0)                    # -1 -> null page 0
@@ -349,43 +368,174 @@ def _decode_key_mask(cache_pos, positions, cache_limit):
     return jnp.concatenate([cvalid, svalid], axis=1)
 
 
-def _decode_cache_kv(cache, block_table, dtype):
-    """(cache k, v, pos) in per-sequence key order for either layout."""
-    if isinstance(cache, PagedAttnCache):
+# ---------------------------------------------------------------------------
+# KV layouts — how decode attention reads a layer's cached keys
+# ---------------------------------------------------------------------------
+
+
+class KVLayout:
+    """Strategy object behind ``gqa_decode``/``mla_decode``.
+
+    One layout = one answer to "how do the committed keys reach the
+    attention math": read the dense buffer, gather the page pool into a
+    dense-width copy, or run the page-aware kernel over the pool in
+    place.  All layouts share the masking contract (``pos = -1`` empty,
+    ``cache_limit``, sliding window, null page) and the commit path's
+    write discipline; ``transient_bytes`` reports the per-step cache-KV
+    copy the layout materializes outside the resident cache (the
+    capacity tax the in-place kernel removes).
+    """
+
+    kind = "?"
+
+    def attend(self, q, k_self, v_self, positions, cache, *, block_table,
+               cache_limit, scale, softcap, window):
+        raise NotImplementedError
+
+    def commit(self, cache, k_self, v_self, positions, block_table):
+        if isinstance(cache, PagedAttnCache):
+            return paged_cache_write(cache, k_self, v_self, positions,
+                                     block_table)
+        return cache_write(cache, k_self, v_self, positions)
+
+    @staticmethod
+    def _concat_attend(ck, cv, cpos, q, k_self, v_self, positions, *,
+                       cache_limit, scale, softcap, window):
+        """The shared (cache ++ self) reference path."""
+        keys = jnp.concatenate([ck.astype(k_self.dtype), k_self], axis=1)
+        vals = jnp.concatenate([cv.astype(v_self.dtype), v_self], axis=1)
+        key_pos = jnp.concatenate(
+            [cpos, positions.astype(jnp.int32)], axis=1)
+        key_valid = _decode_key_mask(cpos, positions, cache_limit)
+        return _cache_decode_attention(
+            q, keys, vals, key_pos, key_valid, positions,
+            scale=scale, softcap=softcap, window=window)
+
+    @staticmethod
+    def transient_bytes(cache, n_rows: int, n_blocks: int) -> int:
+        return 0
+
+
+class _DenseKV(KVLayout):
+    """Contiguous per-sequence cache rows; decode concatenates the row
+    with the self block (one cache-width copy per layer per step)."""
+
+    kind = "dense"
+
+    def attend(self, q, k_self, v_self, positions, cache, *, block_table,
+               cache_limit, scale, softcap, window):
+        return self._concat_attend(
+            cache.k, cache.v, cache.pos, q, k_self, v_self, positions,
+            cache_limit=cache_limit, scale=scale, softcap=softcap,
+            window=window)
+
+    @staticmethod
+    def transient_bytes(cache, n_rows: int, n_blocks: int) -> int:
+        S = cache.k.shape[-3]
+        return n_rows * S * _kv_token_bytes(cache)
+
+
+class _GatheredPagedKV(KVLayout):
+    """``kernel="ref"``: gather the pool through the block table into a
+    dense-width copy, then run the identical concat path — the portable
+    fallback and the parity oracle for the in-place kernel."""
+
+    kind = "gathered"
+
+    def attend(self, q, k_self, v_self, positions, cache, *, block_table,
+               cache_limit, scale, softcap, window):
         ck, cv, cpos = paged_gather(cache, block_table)
-    else:
-        ck, cv, cpos = cache.k, cache.v, cache.pos
-    return ck.astype(dtype), cv.astype(dtype), cpos
+        return self._concat_attend(
+            ck, cv, cpos, q, k_self, v_self, positions,
+            cache_limit=cache_limit, scale=scale, softcap=softcap,
+            window=window)
+
+    @staticmethod
+    def transient_bytes(cache, n_rows: int, n_blocks: int) -> int:
+        bsz = cache.k.shape[-3]
+        return n_rows * n_blocks * bsz * _kv_token_bytes(cache)
 
 
-def _decode_cache_update(cache, k_self, v_self, positions, block_table):
-    if isinstance(cache, PagedAttnCache):
-        return paged_cache_write(cache, k_self, v_self, positions,
-                                 block_table)
-    return cache_write(cache, k_self, v_self, positions)
+class _InplacePagedKV(KVLayout):
+    """``kernel="pallas"``: the page-aware kernel reads the pool in
+    place (one page per grid step via the scalar-prefetched block
+    table) — no dense-width K/V copy exists at any point."""
+
+    kind = "paged"
+
+    def attend(self, q, k_self, v_self, positions, cache, *, block_table,
+               cache_limit, scale, softcap, window):
+        from repro.kernels.paged_attn import paged_decode_attention
+        B = q.shape[0]
+        if cache_limit is None:
+            lim = jnp.full((B,), jnp.iinfo(jnp.int32).max, jnp.int32)
+        else:
+            lim = jnp.broadcast_to(
+                jnp.asarray(cache_limit, jnp.int32).reshape(-1), (B,))
+        return paged_decode_attention(
+            q, cache.k, cache.v, cache.pos, block_table,
+            k_self, v_self, positions, lim,
+            scale=scale, softcap=softcap, window=window)
+
+
+_KV_LAYOUTS = {
+    ("dense", "ref"): _DenseKV(),
+    ("dense", "pallas"): _DenseKV(),   # dense rows: nothing to gather
+    ("paged", "ref"): _GatheredPagedKV(),
+    ("paged", "pallas"): _InplacePagedKV(),
+}
+
+
+def _kv_token_bytes(cache) -> int:
+    """Per-token bytes of one (k, v, pos) cache entry."""
+    hkv, dk = cache.k.shape[-2], cache.k.shape[-1]
+    dv = cache.v.shape[-1]
+    return hkv * (dk * cache.k.dtype.itemsize
+                  + dv * cache.v.dtype.itemsize) + 4
+
+
+def resolve_kv_layout(cache, kernel: str = "ref") -> KVLayout:
+    """Pick the decode KV layout for ``cache`` under ``kernel``.
+
+    ``kernel="ref"`` — gathered fallback on paged caches, plain concat
+    on dense; ``kernel="pallas"`` — the in-place page-aware kernel on
+    paged caches (dense caches have no pages to gather, so the choice
+    is a no-op there).
+    """
+    if kernel not in ("ref", "pallas"):
+        raise ValueError(f"kernel must be ref|pallas, got {kernel!r}")
+    store = "paged" if isinstance(cache, PagedAttnCache) else "dense"
+    return _KV_LAYOUTS[(store, kernel)]
+
+
+def transient_kv_bytes(cache, n_rows: int, n_blocks: int,
+                       kernel: str = "ref") -> int:
+    """Per-decode-step cache-KV bytes a layout copies out of the
+    resident cache for one layer (the ``paged_gather`` / dense-concat
+    transient); 0 for the in-place kernel path."""
+    return resolve_kv_layout(cache, kernel).transient_bytes(
+        cache, n_rows, n_blocks)
 
 
 def gqa_decode(p, x, positions, cache, cfg: ModelConfig, *,
                window: int | None, write_cache: bool,
-               cache_limit=None, block_table=None):
+               cache_limit=None, block_table=None, kernel: str = "ref"):
     """decode mode: block queries vs cache ++ self-block (bidirectional).
 
     ``cache`` is a dense per-sequence ``AttnCache`` or a shared
     ``PagedAttnCache`` (then ``block_table`` (B, K) maps block -> page).
+    ``kernel`` selects the KV layout on paged caches: ``"ref"`` gathers
+    pages into a dense-width copy, ``"pallas"`` reads the pool in place.
     """
     B, n, _ = x.shape
     q, k_self, v_self = gqa_qkv(p, x, positions, cfg)
-    ck, cv, cpos = _decode_cache_kv(cache, block_table, k_self.dtype)
-    keys = jnp.concatenate([ck, k_self], axis=1)
-    vals = jnp.concatenate([cv, v_self], axis=1)
-    key_pos = jnp.concatenate([cpos, positions.astype(jnp.int32)], axis=1)
-    key_valid = _decode_key_mask(cpos, positions, cache_limit)
-    o = _cache_decode_attention(
-        q, keys, vals, key_pos, key_valid, positions,
-        scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
-        window=window)
-    new_cache = _decode_cache_update(cache, k_self, v_self, positions,
-                                     block_table) if write_cache else cache
+    layout = resolve_kv_layout(cache, kernel)
+    o = layout.attend(
+        q, k_self, v_self, positions, cache, block_table=block_table,
+        cache_limit=cache_limit, scale=_gqa_scale(cfg),
+        softcap=cfg.attn_logit_softcap or None, window=window)
+    new_cache = layout.commit(cache, k_self, v_self, positions,
+                              block_table) if write_cache else cache
     return linear(p["wo"], o.reshape(B, n, -1)), new_cache
 
 
@@ -504,19 +654,19 @@ def mla_plain_paged(p, x, meta: SeqMeta, cache: PagedAttnCache,
 
 def mla_decode(p, x, positions, cache, cfg: ModelConfig, *,
                window: int | None, write_cache: bool,
-               cache_limit=None, block_table=None):
+               cache_limit=None, block_table=None, kernel: str = "ref"):
+    """``gqa_decode`` for the absorbed-MLA mixer: the latent MQA form
+    (Hkv = 1 over the r+rope latent) rides the same KV layouts — the
+    page-aware kernel sees it as one shared kv head."""
     q = _mla_q_latent(p, x, positions, cfg)
     k_self, v_self = _mla_kv_latent(p, x, positions, cfg)
-    ck, cv, cpos = _decode_cache_kv(cache, block_table, k_self.dtype)
-    keys = jnp.concatenate([ck, k_self], axis=1)
-    vals = jnp.concatenate([cv, v_self], axis=1)
-    key_pos = jnp.concatenate([cpos, positions.astype(jnp.int32)], axis=1)
-    key_valid = _decode_key_mask(cpos, positions, cache_limit)
-    o = _cache_decode_attention(
-        q, keys, vals, key_pos, key_valid, positions,
-        scale=_mla_scale(cfg), softcap=None, window=window)
-    new_cache = _decode_cache_update(cache, k_self, v_self, positions,
-                                     block_table) if write_cache else cache
+    layout = resolve_kv_layout(cache, kernel)
+    o = layout.attend(
+        q, k_self, v_self, positions, cache, block_table=block_table,
+        cache_limit=cache_limit, scale=_mla_scale(cfg), softcap=None,
+        window=window)
+    new_cache = layout.commit(cache, k_self, v_self, positions,
+                              block_table) if write_cache else cache
     return _mla_out(p, o, cfg), new_cache
 
 

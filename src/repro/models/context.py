@@ -37,6 +37,11 @@ class LayerCtx:
     block_table: jax.Array | None = None   # (B, K): paged caches only
     write_cache: bool = dataclasses.field(
         default=False, metadata={"static": True})
+    # decode KV layout (models.attention.resolve_kv_layout): "ref" =
+    # dense concat / gathered-paged fallback, "pallas" = in-place
+    # page-aware kernel on paged caches
+    kv_kernel: str = dataclasses.field(
+        default="ref", metadata={"static": True})
     # plain mode over paged caches (shared-prefix suffix prefill): read
     # the committed prefix through these pages, commit the computed
     # blocks into ``write_pages``

@@ -168,7 +168,8 @@ def _apply_mixer(cfg: ModelConfig, spec: LayerSpec, lp, h, ctx: LayerCtx,
                                  window=spec.window,
                                  write_cache=ctx.write_cache,
                                  cache_limit=ctx.cache_limit,
-                                 block_table=ctx.block_table)
+                                 block_table=ctx.block_table,
+                                 kernel=ctx.kv_kernel)
         return y, new_cache, None
     if spec.mixer in ("rwkv6", "mamba"):
         return _apply_ssm(cfg, spec, lp, h, ctx, cache)
@@ -491,16 +492,20 @@ class BlockDiffLM:
 
     def decode_step(self, params, block_ids, positions, caches, *,
                     cache_limit=None, block_table=None, memory=None,
-                    memory_valid=None, write: bool = False):
+                    memory_valid=None, write: bool = False,
+                    kv_kernel: str = "ref"):
         """One denoise forward of the current block (serve_step).
 
         block_ids/positions: (B, block_size).  Returns (logits, caches).
         ``block_table`` (B, K) is required iff the attention caches are
         paged (``make_paged_caches``); dense caches ignore it.
+        ``kv_kernel`` picks the decode KV layout (attention.
+        resolve_kv_layout): ``"ref"`` = dense concat / gathered-paged
+        fallback, ``"pallas"`` = the in-place page-aware kernel.
         """
         ctx = LayerCtx(mode="decode", positions=positions,
                        cache_limit=cache_limit, block_table=block_table,
-                       write_cache=write,
+                       write_cache=write, kv_kernel=kv_kernel,
                        memory=memory, memory_valid=memory_valid)
         x = self._embed(params, block_ids)
         x, new_caches, _, _ = self._run_stack(params, x, ctx, caches)
@@ -508,7 +513,8 @@ class BlockDiffLM:
         return logits, new_caches
 
     def prefill_suffix(self, params, suffix_ids, meta: SeqMeta, caches, *,
-                       context_table, write_pages):
+                       context_table, write_pages,
+                       kv_kernel: str = "ref"):
         """Committed pass over a prompt suffix through paged caches.
 
         ``suffix_ids`` (B, T) with ``meta`` carrying *absolute*
@@ -518,10 +524,16 @@ class BlockDiffLM:
         the logits (prefill only needs caches).  Attention-only stacks:
         recurrent layers carry per-slot state that pages cannot share
         (the scheduler gates prefix caching off for them).
+
+        ``kv_kernel`` threads the pool's KV-layout choice through the
+        context; the plain-paged pass itself still gathers the prefix
+        pages (the gather width is the hit prefix, paid once per
+        admission — an in-place plain-mode kernel is the remaining
+        follow-up, see ROADMAP).
         """
         ctx = LayerCtx(mode="plain", meta=meta,
                        context_table=context_table,
-                       write_pages=write_pages)
+                       write_pages=write_pages, kv_kernel=kv_kernel)
         x = self._embed(params, suffix_ids)
         _, new_caches, _, _ = self._run_stack(params, x, ctx, caches)
         return new_caches

@@ -160,6 +160,9 @@ class GenerationConfig:
     n_pages: int | None = None   # paged: pool size (None = dense-equal)
     prefix_cache: bool | None = None  # paged: share prompt pages across
     # requests (None = auto: on for pure-attention backbones)
+    kernel: str = "ref"          # paged decode KV layout: "ref" gathers
+    # pages into a dense-width copy per step, "pallas" reads the page
+    # pool in place (kernels.paged_attn; interpret-mode off-TPU)
 
     def sampling(self, **overrides) -> SamplingParams:
         """The default per-request params this config implies."""

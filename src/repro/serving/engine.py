@@ -44,7 +44,10 @@ unique prompt once and hold one copy of its KV.  Sampling params never
 affect prompt KV, so mixed-params requests share prefix pages freely.
 All layouts produce byte-identical tokens; ``EngineStats.
 prefix_hit_rate`` reports the fraction of prompt blocks served from
-shared pages.
+shared pages.  Paged pools additionally choose how decode *reads* the
+pool via ``kernel="ref"|"pallas"`` — the gathered fallback vs the
+in-place page-aware Pallas kernel; ``EngineStats.transient_kv_bytes``
+reports the per-tick K/V copy the chosen layout pays (0 in-place).
 
 The engine reads weights from a ``ModelServer`` (in-place updates) or
 ``OfflineWeightStore`` (checkpoint baseline) — swapping one for the
@@ -85,6 +88,10 @@ class EngineStats:
     active_slot_ticks: int = 0    # continuous: useful slot-steps
     prefix_hit_blocks: int = 0    # prompt blocks served from shared pages
     prefix_miss_blocks: int = 0   # prompt blocks that paid a prefill
+    # continuous: per-tick cache-KV bytes the pool's decode layout
+    # copies out of the resident cache (scheduler.stats mirror; 0 on
+    # the in-place kernel="pallas" path)
+    transient_kv_bytes: int = 0
     # continuous: per-completion admit -> finish latency, in scheduler
     # ticks (one tick = one block-advance over the pool).  Bounded: a
     # long-lived server keeps the most recent window, not every request
@@ -150,6 +157,8 @@ class RolloutEngine:
         """
         if self._sched is None:
             self._sched = SlotScheduler(self.model, self.gen_cfg)
+            self.stats.transient_kv_bytes = \
+                self._sched.transient_kv_bytes
         return self._sched
 
     # ------------------------------------------------------- sampling
@@ -248,6 +257,10 @@ class RolloutEngine:
                                  prompt_blocks, rng, plist) -> dict:
         """Drain a fixed request batch through the slot pool."""
         sched = self.scheduler
+        # re-mirrored every drain from the scheduler's authoritative
+        # pool-static value (never the resettable stats snapshot), so
+        # the warmup pattern `engine.stats = EngineStats()` keeps it
+        self.stats.transient_kv_bytes = sched.transient_kv_bytes
         prompt_tokens = np.asarray(prompt_tokens)
         prompt_blocks = np.asarray(prompt_blocks)
         B, Lp = prompt_tokens.shape
@@ -344,6 +357,7 @@ class RolloutEngine:
                 "stream(params=) takes model weights; per-request "
                 "SamplingParams belong on submit(..., params=...)")
         sched = self.scheduler
+        self.stats.transient_kv_bytes = sched.transient_kv_bytes
         live = params is None
         while sched.has_work or self._pending:
             if sched.has_work:

@@ -54,6 +54,26 @@ Cache layouts (``cache=``)
              reserving long-request memory, and slot count decouples
              from ``max_len``.
 
+             How decode *reads* the pool is the orthogonal
+             ``kernel=`` knob (the KV layout,
+             ``models.attention.resolve_kv_layout``):
+
+               * ``"ref"``    — ``paged_gather`` materializes a
+                 dense-width K/V copy per layer per tick (portable
+                 fallback / parity oracle);
+               * ``"pallas"`` — the page-aware kernel
+                 (``kernels.paged_attn``) reads pages in place via the
+                 scalar-prefetched block table, so per-step transient
+                 KV drops to zero (``stats.transient_kv_bytes``) and
+                 decode memory stops scaling with slots x K*bsz.
+                 Off-TPU it runs under ``interpret=True`` — CI
+                 exercises the real kernel path.
+
+             Both layouts are byte-identical in decode tokens to dense
+             (tests/test_paged_attn.py), and the kernel choice is a
+             pool static like ``s_max`` — it never retraces per
+             request.
+
 Shared-prefix layer (``prefix_cache=``, paged only)
 ---------------------------------------------------
 The third cache layer (slots -> pages -> *shared* pages): a refcounted
@@ -117,8 +137,8 @@ maps (tested in tests/test_scheduler.py), so RL rollouts harvested from
 the scheduler remain exactly consumable by the DiPO trajectory replay.
 
 Follow-ups tracked in ROADMAP.md: multi-host page pools, batched
-same-width admission, a page-aware attention kernel, and optimistic
-admission + preemption.
+same-width admission, an in-place plain-mode kernel for suffix
+prefill, and optimistic admission + preemption.
 """
 
 from __future__ import annotations
@@ -178,6 +198,10 @@ class SchedulerStats:
     denoise_steps: int = 0       # actual denoise steps across requests
     peak_active: int = 0         # max concurrently live slots
     prefill_blocks: int = 0      # prompt blocks actually prefilled
+    # per-tick cache-KV bytes the decode layout copies out of the
+    # resident cache (max over layers: dense concat / paged gather);
+    # 0 on the in-place kernel="pallas" path — static per pool config
+    transient_kv_bytes: int = 0
     # paged cache only
     deferred: int = 0            # admissions deferred for lack of pages
     page_allocs: int = 0
@@ -225,6 +249,13 @@ class SlotScheduler:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if cache not in ("dense", "paged"):
             raise ValueError(f"cache must be dense|paged, got {cache!r}")
+        kernel = gen_cfg.kernel
+        if kernel not in ("ref", "pallas"):
+            raise ValueError(f"kernel must be ref|pallas, got {kernel!r}")
+        if kernel == "pallas" and cache != "paged":
+            raise ValueError(
+                "kernel='pallas' requires cache='paged' — dense rows "
+                "have no page pool to read in place")
         assert max_len % cfg.block_size == 0
         self.model = model
         self.gen_cfg = gen_cfg
@@ -234,6 +265,7 @@ class SlotScheduler:
         self.n_blocks_total = max_len // cfg.block_size
         self.eos_id = gen_cfg.eos_id        # default stop token
         self.cache = cache
+        self.kernel = kernel
         self.stats = SchedulerStats()
         n_pages = gen_cfg.n_pages
         prefix_cache = gen_cfg.prefix_cache
@@ -276,6 +308,11 @@ class SlotScheduler:
         self._slot_admit_tick: list[int] = [0] * n_slots
         self._next_uid = 0
         self._state = self._init_pool()
+        # pool-static (cache layout + kernel choice fix it at
+        # construction); re-stamped into stats every tick so the common
+        # warmup pattern `sched.stats = SchedulerStats()` self-heals
+        self.transient_kv_bytes = self._transient_kv_bytes()
+        self.stats.transient_kv_bytes = self.transient_kv_bytes
 
         # donate the pool state: the old GenState (slot caches included)
         # is always dead after the call, so advance/admit alias their
@@ -290,7 +327,8 @@ class SlotScheduler:
 
         def _advance_impl(params, st):
             self.n_advance_traces += 1
-            return decoding.advance_block(model, params, st, s_max=s_max)
+            return decoding.advance_block(model, params, st, s_max=s_max,
+                                          kv_kernel=self.kernel)
 
         self._advance = jax.jit(_advance_impl, donate_argnums=(1,))
         self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(1,))
@@ -300,6 +338,21 @@ class SlotScheduler:
                                          donate_argnums=(1,))
 
     # ----------------------------------------------------------- state
+    def _transient_kv_bytes(self) -> int:
+        """Peak per-tick cache-KV copy the decode layout materializes
+        (max over attention layers — layers run sequentially under the
+        scan, so one layer's gather is live at a time).  0 for the
+        in-place ``kernel="pallas"`` path."""
+        caches = self._state.caches
+        out = 0
+        for c in (list(caches["prefix"].values())
+                  + list(caches["groups"].values())):
+            if isinstance(c, (attention.AttnCache,
+                              attention.PagedAttnCache)):
+                out = max(out, attention.transient_kv_bytes(
+                    c, self.n_slots, self.n_blocks_total, self.kernel))
+        return out
+
     @property
     def n_usable_pages(self) -> int:
         """Allocatable pages (excludes the null page)."""
@@ -466,7 +519,8 @@ class SlotScheduler:
         pblocks = h + suffix.shape[1] // bsz
         caches = decoding.prefill_suffix(
             self.model, params, suffix, jnp.int32(h), st.caches,
-            context_table=ctx_pages[None], write_pages=sfx_pages[None])
+            context_table=ctx_pages[None], write_pages=sfx_pages[None],
+            kv_kernel=self.kernel)
         return self._scatter_slot(st, slot, row, key, limit, pblocks,
                                   caches,
                                   st.table.at[slot].set(table_row), samp)
@@ -767,6 +821,7 @@ class SlotScheduler:
             raise TypeError(
                 "step(params=) takes model weights; per-request "
                 "SamplingParams belong on submit(..., params=...)")
+        self.stats.transient_kv_bytes = self.transient_kv_bytes
         # ---- admit queued requests into free slots -------------------
         out: list[Completion] = []
         for slot in range(self.n_slots):

@@ -1,0 +1,321 @@
+"""Page-aware decode kernel: parity grid across the three KV layouts.
+
+Two levels:
+
+* kernel-level — ``kernels.paged_attn.paged_decode_attention`` (run
+  through the real ``resolve_kv_layout`` dispatch) against the gathered
+  fallback on raw pools: GQA / MLA-MQA shapes, sliding window, softcap,
+  ragged block tables with -1 holes, ``cache_limit`` edges, and the
+  null-page no-leak guarantee (bitwise: pool garbage cannot change the
+  output);
+* scheduler-level — decode TOKENS byte-identical across
+  dense / gathered-paged / in-place-pallas pools under admission and
+  eviction churn (the acceptance criterion), including sliding-window
+  and MLA stacks, prefix-shared pages, and mixed SamplingParams with
+  the zero-retrace invariant (``n_advance_traces == 1``).
+
+Nature of the token-level contract: the online-softmax kernel and the
+plain-softmax fallback are different f32 arithmetic, so *logits* agree
+only to ~1e-5 (hence the kernel-level rtol) — token byte-equality holds
+because argmax/threshold decisions have margins orders of magnitude
+above that rounding, verified empirically for these seeds on the
+interpret path (the same empirical-bitwise standard PR 3 used for
+``prefill_suffix``).  A failure here after a jax/XLA upgrade or on real
+TPU hardware means a *decision boundary* moved — investigate the
+numerics before touching the assertion.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.config import ModelConfig
+from repro.models.model import BlockDiffLM
+from repro.serving.engine import GenerationConfig, RolloutEngine
+from repro.serving.api import SamplingParams
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.server import ModelServer
+
+BSZ = 8
+MAX_LEN = 48
+_BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+             vocab_size=128, block_size=BSZ, attn_impl="structured")
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity (raw pools, no model)
+# ---------------------------------------------------------------------------
+
+
+def _pool(key, *, P=11, K=5, Hkv=2, Dk=32, Dv=32, B=3):
+    """A random pool + ragged table (with -1 holes and an all-hole row)
+    + self block + per-row positions/limits covering the edge cases."""
+    ks = jax.random.split(key, 6)
+    kp = jax.random.normal(ks[0], (P, BSZ, Hkv, Dk), jnp.float32)
+    vp = jax.random.normal(ks[1], (P, BSZ, Hkv, Dv), jnp.float32)
+    pos = np.arange(P * BSZ).reshape(P, BSZ).astype(np.int32) % (K * BSZ)
+    pos[4, 3:] = -1                       # partially filled page
+    table = np.full((B, K), -1, np.int32)
+    table[0, :3] = [1, 2, 3]              # trailing holes
+    table[1] = [5, 6, 7, 8, 9]            # full row
+    # row 2: no pages at all — only the self block is visible
+    k_self = jax.random.normal(ks[2], (B, BSZ, Hkv, Dk), jnp.float32)
+    v_self = jax.random.normal(ks[3], (B, BSZ, Hkv, Dv), jnp.float32)
+    # cache_limit edges: 0 (nothing committed), mid-sequence, full
+    blk = np.array([0, 3, K], np.int32)
+    positions = blk[:, None] * BSZ + np.arange(BSZ)[None, :]
+    limit = blk * BSZ
+    cache = A.PagedAttnCache(k=kp, v=vp, pos=jnp.asarray(pos))
+    return (cache, jnp.asarray(table), k_self, v_self,
+            jnp.asarray(positions), jnp.asarray(limit))
+
+
+def _attend(cache, table, k_self, v_self, positions, limit, q, kernel,
+            **kw):
+    return A.resolve_kv_layout(cache, kernel).attend(
+        q, k_self, v_self, positions, cache, block_table=table,
+        cache_limit=limit, **kw)
+
+
+@pytest.mark.parametrize("shape", ["gqa", "mla"])
+@pytest.mark.parametrize("window,softcap", [(None, None), (12, None),
+                                            (None, 5.0), (20, 5.0)])
+def test_kernel_matches_gathered_reference(shape, window, softcap):
+    """In-place kernel vs gathered fallback on the ragged-pool grid:
+    GQA and the MLA latent-MQA form (Hkv=1, Dk != Dv), sliding window,
+    softcap, -1 table holes, partially filled pages, limit edges."""
+    H = 4
+    dims = dict(Hkv=2, Dk=32, Dv=32) if shape == "gqa" \
+        else dict(Hkv=1, Dk=40, Dv=32)
+    cache, table, k_self, v_self, positions, limit = _pool(
+        jax.random.PRNGKey(0), **dims)
+    q = jax.random.normal(jax.random.PRNGKey(7),
+                          (3, BSZ, H, dims["Dk"]), jnp.float32)
+    kw = dict(scale=dims["Dk"] ** -0.5, softcap=softcap, window=window)
+    o_ref = _attend(cache, table, k_self, v_self, positions, limit, q,
+                    "ref", **kw)
+    o_pal = _attend(cache, table, k_self, v_self, positions, limit, q,
+                    "pallas", **kw)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_null_page_and_holes_never_leak():
+    """Bitwise guarantee: garbage in the null page, in unmapped pages,
+    and in pos=-1 slots cannot change the kernel output — the masking
+    semantics (table -1, pos -1, cache_limit) hide them exactly."""
+    cache, table, k_self, v_self, positions, limit = _pool(
+        jax.random.PRNGKey(1))
+    q = jax.random.normal(jax.random.PRNGKey(8), (3, BSZ, 4, 32),
+                          jnp.float32)
+    kw = dict(scale=32 ** -0.5, softcap=None, window=None)
+    base = _attend(cache, table, k_self, v_self, positions, limit, q,
+                   "pallas", **kw)
+    # poison everything the mask must hide: the null page, pages no
+    # table row maps (e.g. 4 has pos=-1 slots; 10 unmapped), and keys
+    # past each row's cache_limit (handled by limit, not contents)
+    mapped = {int(p) for p in np.asarray(table).ravel() if p >= 0}
+    unmapped = [p for p in range(cache.k.shape[0]) if p not in mapped]
+    poison = cache._replace(
+        k=cache.k.at[jnp.asarray(unmapped)].set(1e9),
+        v=cache.v.at[jnp.asarray(unmapped)].set(-1e9))
+    got = _attend(poison, table, k_self, v_self, positions, limit, q,
+                  "pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+    # limit=0 row sees only its self block: pool contents irrelevant
+    poison_all = cache._replace(k=cache.k.at[:].set(1e9))
+    got0 = _attend(poison_all, table, k_self, v_self, positions, limit,
+                   q, "pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(got0)[0],
+                                  np.asarray(base)[0])
+
+
+def test_cache_limit_edges_match_reference():
+    """Per-row limits at 0 / one-block / exactly-full agree with the
+    gathered fallback (which inherits them from _decode_key_mask)."""
+    cache, table, k_self, v_self, positions, _ = _pool(
+        jax.random.PRNGKey(2))
+    q = jax.random.normal(jax.random.PRNGKey(9), (3, BSZ, 4, 32),
+                          jnp.float32)
+    kw = dict(scale=32 ** -0.5, softcap=None, window=None)
+    for lim in ([0, 0, 0], [BSZ, BSZ, BSZ], [0, 17, 5 * BSZ]):
+        lim = jnp.asarray(lim, jnp.int32)
+        o_ref = _attend(cache, table, k_self, v_self, positions, lim, q,
+                        "ref", **kw)
+        o_pal = _attend(cache, table, k_self, v_self, positions, lim, q,
+                        "pallas", **kw)
+        np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_transient_kv_bytes_accounting():
+    """The layout abstraction's copy accounting: gather width for the
+    ref fallback, dense concat width for dense rows, 0 in place."""
+    cache, *_ = _pool(jax.random.PRNGKey(3))
+    per_tok = 2 * (32 + 32) * 4 + 4          # Hkv*(Dk+Dv)*itemsize + pos
+    assert A.transient_kv_bytes(cache, 3, 5, "ref") == 3 * 5 * BSZ * per_tok
+    assert A.transient_kv_bytes(cache, 3, 5, "pallas") == 0
+    dense = A.make_attn_cache(3, MAX_LEN, 2, 32, 32, jnp.float32)
+    assert A.transient_kv_bytes(dense, 3, 5, "ref") \
+        == 3 * MAX_LEN * per_tok
+    with pytest.raises(ValueError, match="kernel"):
+        A.resolve_kv_layout(cache, "cuda")
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level: decode tokens byte-identical across the three layouts
+# ---------------------------------------------------------------------------
+
+
+def _drain(model, params, sched, prompt, pblocks, keys, budgets):
+    for i in range(len(keys)):
+        sched.submit(prompt[i % 4], pblocks[i % 4], keys[i],
+                     max_new_blocks=budgets[i % len(budgets)])
+    return {c.uid: c for c in sched.run(params)}
+
+
+def _assert_same_tokens(ref, got):
+    assert sorted(ref) == sorted(got)
+    for uid, d in ref.items():
+        p = got[uid]
+        assert d.gen_blocks == p.gen_blocks
+        assert d.denoise_steps == p.denoise_steps
+        np.testing.assert_array_equal(d.tokens, p.tokens)
+        np.testing.assert_array_equal(d.steps, p.steps)
+
+
+def _three_way(cfg, *, n_pages=13, tau=0.6):
+    model = BlockDiffLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (4, 16), 4, 100))
+    pblocks = np.array([2, 1, 2, 1], np.int32)
+    keys = jax.random.split(jax.random.PRNGKey(13), 6)
+    outs = {}
+    for cache, kernel in [("dense", "ref"), ("paged", "ref"),
+                          ("paged", "pallas")]:
+        kw = dict(n_pages=n_pages, prefix_cache=False) \
+            if cache == "paged" else {}
+        sched = SlotScheduler(model, n_slots=3, max_len=MAX_LEN, s_max=4,
+                              mode="dynamic", tau=tau, temperature=1.0,
+                              eos_id=1, cache=cache, kernel=kernel, **kw)
+        outs[(cache, kernel)] = (
+            _drain(model, params, sched, prompt, pblocks, keys,
+                   [3, None, 2]),
+            sched.stats.transient_kv_bytes)
+    ref = outs[("dense", "ref")][0]
+    _assert_same_tokens(ref, outs[("paged", "ref")][0])
+    _assert_same_tokens(ref, outs[("paged", "pallas")][0])
+    assert outs[("paged", "ref")][1] > 0
+    assert outs[("paged", "pallas")][1] == 0   # no per-step K/V copy
+    assert outs[("dense", "ref")][1] > 0       # dense concat transient
+
+
+def test_pallas_tokens_match_dense_and_gathered():
+    """The acceptance criterion: dense vs gathered-paged vs in-place
+    pallas produce byte-identical tokens, step maps and denoise counts
+    under mixed-length admission/eviction churn on a tight pool — with
+    transient_kv_bytes == 0 only on the in-place path."""
+    _three_way(ModelConfig(name="t", **_BASE))
+
+
+@pytest.mark.parametrize("variant", ["swa", "mla"])
+def test_pallas_parity_swa_and_mla(variant):
+    """Sliding-window (dense rings vs paged window-masking) and the
+    absorbed-MLA latent pool keep three-way byte parity."""
+    if variant == "swa":
+        cfg = ModelConfig(name="w", sliding_window=16, **_BASE)
+    else:
+        cfg = ModelConfig(name="m", attn_kind="mla", kv_lora_rank=32,
+                          qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                          **_BASE)
+    _three_way(cfg, tau=0.8)
+
+
+def test_pallas_prefix_shared_pages_parity():
+    """A DiPO G-group on prefix-shared pages decodes the same bytes
+    through the in-place kernel as through the gathered fallback, with
+    identical sharing stats (the kernel reads shared pages exactly
+    like exclusive ones — refcounts are invisible to attention)."""
+    model = BlockDiffLM(ModelConfig(name="t", **_BASE))
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (2, 16), 4, 100))
+    keys = jax.random.split(jax.random.PRNGKey(9), 8)
+    outs = {}
+    for kernel in ["ref", "pallas"]:
+        sched = SlotScheduler(model, n_slots=4, max_len=MAX_LEN, s_max=3,
+                              mode="dynamic", tau=0.8, temperature=1.0,
+                              eos_id=1, cache="paged", n_pages=25,
+                              prefix_cache=True, kernel=kernel)
+        for i in range(8):      # 2 prompts x G=4, members adjacent
+            sched.submit(prompt[i // 4], 2, keys[i], max_new_blocks=3)
+        outs[kernel] = ({c.uid: c for c in sched.run(params)},
+                        sched.stats)
+    _assert_same_tokens(outs["ref"][0], outs["pallas"][0])
+    assert outs["pallas"][1].prefix_hit_blocks \
+        == outs["ref"][1].prefix_hit_blocks > 0
+    assert outs["pallas"][1].transient_kv_bytes == 0
+
+
+def test_pallas_zero_retrace_mixed_params():
+    """Mixed SamplingParams on one pallas pool: a single advance trace
+    (the kernel choice is a pool static, request params stay traced
+    data) and per-row byte parity with the gathered fallback."""
+    model = BlockDiffLM(ModelConfig(name="t", **_BASE))
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (4, 16), 4, 100))
+    pblocks = np.array([2, 1, 2, 1], np.int32)
+    keys = jax.random.split(jax.random.PRNGKey(21), 6)
+    mix = [SamplingParams(tau=0.5, temperature=1.0, max_new_blocks=2),
+           SamplingParams(tau=0.95, max_new_blocks=3),
+           SamplingParams(mode="static", n_steps=3, temperature=1.0,
+                          max_new_blocks=2)]
+    outs = {}
+    for kernel in ["ref", "pallas"]:
+        sched = SlotScheduler(model, n_slots=3, max_len=MAX_LEN, s_max=4,
+                              eos_id=1, cache="paged", kernel=kernel)
+        for i in range(6):
+            sched.submit(prompt[i % 4], int(pblocks[i % 4]), keys[i],
+                         params=mix[i % 3])
+        outs[kernel] = {c.uid: c for c in sched.run(params)}
+        assert sched.n_advance_traces == 1, sched.n_advance_traces
+    _assert_same_tokens(outs["ref"], outs["pallas"])
+
+
+def test_engine_surfaces_transient_kv_bytes():
+    """EngineStats mirrors the pool's transient-copy stat; the pallas
+    engine keeps the generate_ids static-parity contract."""
+    model = BlockDiffLM(ModelConfig(name="t", **_BASE))
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (3, 16), 4, 100))
+    pblocks = np.array([2, 1, 2], np.int32)
+    rng = jax.random.PRNGKey(17)
+    outs, stats = {}, {}
+    for mode, cache, kernel in [("static", "dense", "ref"),
+                                ("continuous", "paged", "pallas")]:
+        eng = RolloutEngine(model, ModelServer(params), GenerationConfig(
+            max_len=MAX_LEN, s_max=4, mode="dynamic", tau=0.6,
+            temperature=1.0, batching=mode, n_slots=3, cache=cache,
+            kernel=kernel))
+        outs[mode] = eng.generate_ids(prompt, pblocks, rng)
+        stats[mode] = eng.stats
+    a, b = outs["static"], outs["continuous"]
+    for k in ["tokens", "steps", "gen_blocks", "denoise_steps"]:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert stats["continuous"].transient_kv_bytes == 0
+    assert stats["static"].transient_kv_bytes == 0   # no pool built
+
+
+def test_kernel_config_validation():
+    model = BlockDiffLM(ModelConfig(name="t", **_BASE))
+    with pytest.raises(ValueError, match="pallas"):
+        SlotScheduler(model, n_slots=2, max_len=MAX_LEN,
+                      cache="dense", kernel="pallas")
+    with pytest.raises(ValueError, match="kernel"):
+        SlotScheduler(model, n_slots=2, max_len=MAX_LEN,
+                      cache="paged", kernel="triton")

@@ -287,17 +287,22 @@ def test_paged_matches_dense_under_churn(setup):
     assert pstats.peak_pages_in_use <= 12
 
 
-@pytest.mark.parametrize("variant", ["hybrid", "swa"])
+@pytest.mark.parametrize("variant", ["hybrid", "swa", "hybrid-pallas"])
 def test_paged_matches_dense_hybrid_and_window(variant):
     """Paged caching must also hold for per-slot recurrent states
     (hybrid SSM layers scatter into the slot row while attention layers
     scatter into pages) and sliding-window layers (dense uses a ring
-    buffer, paged holds all pages and masks by window)."""
-    if variant == "hybrid":
+    buffer, paged holds all pages and masks by window).  The
+    ``hybrid-pallas`` variant runs the paged side through the in-place
+    page-aware kernel — attention layers read the pool in place while
+    SSM layers keep per-slot state (tests/test_paged_attn.py covers the
+    pure-attention kernel grid)."""
+    if variant.startswith("hybrid"):
         cfg = CFG.replace(name="h", arch_type="hybrid", ssm_kind="mamba",
                           attn_every=2)
     else:
         cfg = CFG.replace(name="w", sliding_window=16)
+    kernel = "pallas" if variant.endswith("pallas") else "ref"
     model = BlockDiffLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prompt = np.asarray(
@@ -306,7 +311,7 @@ def test_paged_matches_dense_hybrid_and_window(variant):
     keys = jax.random.split(jax.random.PRNGKey(6), 6)
     outs = {}
     for cache in ["dense", "paged"]:
-        kw = dict(n_pages=13) if cache == "paged" else {}
+        kw = dict(n_pages=13, kernel=kernel) if cache == "paged" else {}
         sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=3,
                               mode="dynamic", tau=0.8, eos_id=1,
                               cache=cache, **kw)
