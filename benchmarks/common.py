@@ -1,7 +1,18 @@
-"""Shared benchmark helpers: a small CPU-trainable model + quick SFT."""
+"""Shared benchmark helpers: a small CPU-trainable model, quick SFT,
+and the one JSON-emitting results path every suite shares.
+
+Suites that track a perf trajectory across PRs write
+``benchmarks/BENCH_<suite>.json`` via ``write_bench_json`` (one schema:
+``{"suite", "schema_version", "entries": [...]}``) and CI's bench-smoke
+job replays them on tiny shapes, validating the emitted schema with
+``validate_bench_json`` — so a suite that silently stops emitting (or
+changes shape) fails the push, not the next reader.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -54,3 +65,54 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ------------------------------------------------------- JSON results
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_json_path(suite: str) -> str:
+    """Canonical trajectory artifact for ``suite`` (committed to git)."""
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_{suite}.json")
+
+
+def write_bench_json(suite: str, entries: list[dict]) -> str:
+    """Write a suite's result entries through the shared schema.
+
+    Every entry is one measured configuration (a flat dict of scalars);
+    the envelope carries the suite name and schema version so the CI
+    smoke job — and cross-PR trajectory diffs — can parse any suite's
+    artifact the same way.  Returns the written path.
+    """
+    path = bench_json_path(suite)
+    payload = {"suite": suite,
+               "schema_version": BENCH_SCHEMA_VERSION,
+               "entries": entries}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def validate_bench_json(suite: str, required_keys: tuple[str, ...]
+                        ) -> str:
+    """Assert the suite's artifact exists and matches the shared schema
+    (envelope fields + ``required_keys`` present in every entry).
+    Raises AssertionError with a pointed message otherwise; returns the
+    validated path."""
+    path = bench_json_path(suite)
+    assert os.path.exists(path), f"{path} was not emitted"
+    with open(path) as f:
+        data = json.load(f)
+    assert data.get("suite") == suite, \
+        f"{path}: suite={data.get('suite')!r} != {suite!r}"
+    assert data.get("schema_version") == BENCH_SCHEMA_VERSION, \
+        f"{path}: schema_version {data.get('schema_version')!r}"
+    entries = data.get("entries")
+    assert isinstance(entries, list) and entries, \
+        f"{path}: entries must be a non-empty list"
+    for i, e in enumerate(entries):
+        missing = [k for k in required_keys if k not in e]
+        assert not missing, f"{path}: entry {i} missing {missing}"
+    return path

@@ -20,16 +20,22 @@ concurrency stays capped at 4 by worst-case-length slot regions.
 Tokens are byte-identical across the two layouts; ``gen_tokens`` counts
 to the first EOS inclusive.
 
-Section 3 (prefix cache on vs off): the DiPO-shaped group-rollout
-workload — N prompts x G=8 trajectories each, the exact shape
-``rl.trainer`` submits — on equal paged pools.  With the shared-prefix
-index on, each group's first member prefills and registers the prompt's
-pages and the other G-1 map them straight into their block tables:
-``prefill_blocks`` drops to ~1/G (the admission-cost saving) and
-``peak_pages_live`` — pages referenced by live slots — drops by nearly
-the duplicated-prompt footprint (the memory saving), with
-``prefix_hit_blocks`` accounting for both.  Tokens are byte-identical
-on vs off (asserted here, pinned in tests/test_prefix_cache.py).
+Section 3 (prefix cache on vs off, and the admission KV layout): the
+DiPO-shaped group-rollout workload — N prompts x G=8 trajectories each,
+the exact shape ``rl.trainer`` submits — on equal paged pools.  With
+the shared-prefix index on, each group's first member prefills and
+registers the prompt's pages and the others map them straight into
+their block tables: ``prefill_blocks`` drops (the admission-cost
+saving) and ``peak_pages_live`` — pages referenced by live slots —
+drops by nearly the duplicated-prompt footprint (the memory saving).
+Odd members carry one divergent tail block, so their admissions are
+*partial* hits that pay a suffix prefill; the prefix-on pool then runs
+under both admission KV layouts — ``kernel="ref"`` gathers the hit
+prefix into a dense-width copy per admission
+(``admit_transient_kv_bytes`` > 0, asserted) while ``kernel="pallas"``
+streams it in place (asserted exactly 0).  Tokens are byte-identical
+across all three runs (asserted here, pinned in
+tests/test_prefix_cache.py and tests/test_paged_attn.py).
 
 Section 4 (mixed SamplingParams, the §4.2 heterogeneous-traffic
 workload): requests round-robin over four per-request configurations —
@@ -143,41 +149,65 @@ def _paged_vs_dense(model, params, toks, blocks, max_len, budget):
 
 
 def _group_rollout(model, params, tok, max_len, *, n_prompts, G, budget):
-    """N prompts x G rollouts each (DiPO groups), prefix cache on vs off
-    at equal pool size.  Counter-based (no timing flakiness): prefill
-    steps paid, prompt blocks served from shared pages, and the
-    live-page peak a retention-free pool would need."""
+    """N prompts x G rollouts each (DiPO groups), prefix cache off vs on
+    at equal pool size, and on across admission KV layouts.  Odd group
+    members extend their prompt by one divergent block, so with the
+    index on their admissions take the partial-hit *suffix prefill*
+    path — the admission-time prefix gather the in-place prefill kernel
+    eliminates.  Counter-based (no timing flakiness): prefill steps
+    paid, prompt blocks served from shared pages, the live-page peak a
+    retention-free pool would need, and the peak admission gather
+    (``admit_transient_kv_bytes`` — asserted > 0 for the gathered
+    ``kernel="ref"`` layout and exactly 0 for ``kernel="pallas"``)."""
     cfg = model.cfg
-    toks, blocks = _ragged_workload(tok, cfg.block_size, n_prompts)
+    bsz = cfg.block_size
+    toks, blocks = _ragged_workload(tok, bsz, n_prompts)
+    # one divergent extra block per prompt (a shifted copy of its first
+    # block — any tokens that don't extend the registered chain)
+    etoks = np.zeros((n_prompts, toks.shape[1] + bsz), np.int32)
+    etoks[:, :toks.shape[1]] = toks
+    for p in range(n_prompts):
+        lo = int(blocks[p]) * bsz
+        etoks[p, lo:lo + bsz] = (toks[p, :bsz] + 1) % 250
     keys = jax.random.split(jax.random.PRNGKey(5), n_prompts * G)
     n_slots = 2 * G
-    n_pages = n_slots * (int(blocks.max()) + budget) + 1
+    n_pages = n_slots * (int(blocks.max()) + 1 + budget) + 1
     rows = []
     ref = None
-    for pc in (False, True):
+    for pc, kernel in ((False, "ref"), (True, "ref"), (True, "pallas")):
         sched = SlotScheduler(
             model, n_slots=n_slots, max_len=max_len, s_max=4,
             mode="dynamic", tau=0.7, temperature=1.0, eos_id=1,
-            cache="paged", n_pages=n_pages, prefix_cache=pc)
-        # group members adjacent, exactly as generate_group_ids submits
+            cache="paged", n_pages=n_pages, prefix_cache=pc,
+            kernel=kernel)
+        # group members adjacent, exactly as generate_group_ids submits;
+        # odd members carry the divergent tail block (partial hits)
         for i in range(n_prompts * G):
             p = i // G
-            sched.submit(toks[p], int(blocks[p]), keys[i],
-                         max_new_blocks=budget)
+            if i % 2:
+                sched.submit(etoks[p], int(blocks[p]) + 1, keys[i],
+                             max_new_blocks=budget)
+            else:
+                sched.submit(toks[p], int(blocks[p]), keys[i],
+                             max_new_blocks=budget)
         comps = {c.uid: c for c in sched.run(params)}
         if ref is None:
             ref = comps
-        else:  # prefix sharing must not change a single byte
+        else:  # prefix sharing / kernel choice must not change a byte
             for uid, c in ref.items():
                 hi = (c.prompt_blocks + c.gen_blocks) * cfg.block_size
                 np.testing.assert_array_equal(c.tokens[:hi],
                                               comps[uid].tokens[:hi])
         s = sched.stats
+        if pc:  # the admission gather exists iff the layout gathers
+            assert (s.admit_transient_kv_bytes > 0) == (kernel == "ref"), \
+                (kernel, s.admit_transient_kv_bytes)
         rows.append(
-            f"{'on' if pc else 'off'},{n_prompts},{G},{n_pages - 1},"
-            f"{len(comps)},{s.prefill_blocks},{s.prefix_hit_blocks},"
-            f"{s.shared_pages},{s.peak_pages_live},{s.peak_pages_in_use},"
-            f"{s.ticks},{s.gen_tokens}")
+            f"{'on' if pc else 'off'},{kernel},{n_prompts},{G},"
+            f"{n_pages - 1},{len(comps)},{s.prefill_blocks},"
+            f"{s.prefix_hit_blocks},{s.shared_pages},{s.peak_pages_live},"
+            f"{s.peak_pages_in_use},{s.ticks},{s.gen_tokens},"
+            f"{s.admit_transient_kv_bytes}")
     return rows
 
 
@@ -326,9 +356,9 @@ def run(quick: bool = True) -> list[str]:
     budget = 3 if quick else 4          # response cap in blocks
     rows += _paged_vs_dense(model, params, toks, blocks, max_len, budget)
 
-    rows.append("prefix,prompts,G,pool_pages,requests,prefill_blocks,"
-                "hit_blocks,shared_pages,peak_pages_live,peak_pages,"
-                "ticks,gen_tokens")
+    rows.append("prefix,kernel,prompts,G,pool_pages,requests,"
+                "prefill_blocks,hit_blocks,shared_pages,peak_pages_live,"
+                "peak_pages,ticks,gen_tokens,admit_transient_kv_bytes")
     rows += _group_rollout(model, params, tok, max_len,
                            n_prompts=4 if quick else 8, G=8,
                            budget=budget)

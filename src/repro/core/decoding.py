@@ -178,14 +178,18 @@ def prefill_suffix(model, params, suffix_tokens, start_block: jax.Array,
     (B, Ls // block_size) freshly allocated pages that receive the
     suffix KV.  Returns the updated (paged) caches.
 
-    Bitwise contract: the combined key array (gathered prefix pages ++
-    suffix self-KV) has exactly the full prompt's key layout, and the
-    chunked attention kernel is row- and length-invariant over it, so
-    the committed suffix KV is *byte-identical* to the same blocks of a
-    full ``prefill`` — the property the scheduler's prefix-cache on/off
-    token-parity guarantee rests on.  Holds when the cache dtype equals
-    the activation dtype (fp32 default); lower-precision caches would
-    round the prefix context where the full pass attends pre-rounding.
+    Bitwise contract: the combined key array (prefix pages ++ suffix
+    self-KV) has exactly the full prompt's key layout, and the attention
+    over it is row- and length-invariant, so the committed suffix KV is
+    *byte-identical* to the same blocks of a full ``prefill`` — the
+    property the scheduler's prefix-cache on/off token-parity guarantee
+    rests on.  This holds on both prefill KV layouts (``kv_kernel="ref"``
+    gathers the prefix pages into a dense-width copy; ``"pallas"``
+    streams them in place via ``paged_prefill_attention``, which replays
+    the reference chunk walk over a compact scratch copy of the same key
+    layout) and when the cache dtype equals the activation dtype (fp32
+    default); lower-precision caches would round the prefix context
+    where the full pass attends pre-rounding.
     """
     cfg = model.cfg
     B, Ls = suffix_tokens.shape

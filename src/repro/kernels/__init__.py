@@ -2,9 +2,12 @@
 #   block_diff_attn.py — masked-pass flash attention under the
 #       block-diffusion visibility predicate (tile-skipping via ops.
 #       build_tile_map); validated against ref.mha_reference.
-#   paged_attn.py      — decode-mode paged attention that reads the
-#       serving KV page pool in place through the per-slot block table
-#       (scalar-prefetch gather); validated against the gathered
-#       fallback in models.attention (tests/test_paged_attn.py).
+#   paged_attn.py      — the paged-kernel family: decode attention and
+#       plain-mode suffix prefill, both reading the serving KV page
+#       pool in place through scalar-prefetched block tables (zero
+#       transient gather); sub-tile shapes are zero-padded to the
+#       (8, 128) tile so they stay compiled-eligible on TPU.  plan_exec
+#       reports the chosen execution mode.  Validated against the
+#       gathered fallback in models.attention (tests/test_paged_attn.py).
 # Both auto-run interpret=True off-TPU so CPU CI exercises the real
 # kernel paths.  ops.py dispatches the masked-pass implementations.

@@ -1,46 +1,71 @@
-"""Pallas TPU paged-decode attention: read the KV page pool in place.
+"""Pallas TPU paged-attention family: read the KV page pool in place.
 
-The decode-mode counterpart of ``block_diff_attn.py``: one current-block
-query tile per sequence attends to its committed KV *directly in the
-shared page pool* (``models.attention.PagedAttnCache``).  The per-slot
-block table rides in as a **scalar-prefetch** operand, so each grid
-step's BlockSpec index map resolves "which page does sequence b's block
-j live in" *before* the step's DMA is issued — the kernel gathers pages
-page-by-page inside the grid instead of materializing the dense-width
-``paged_gather`` copy (slots x K*bsz keys per layer per step) that the
-gathered fallback pays.
+Two kernels share one design — the per-slot block table rides in as a
+**scalar-prefetch** operand, so each grid step's BlockSpec index map
+resolves "which page does sequence b's block j live in" *before* the
+step's DMA is issued, and no dense-width ``paged_gather`` copy of the
+pool is ever materialized:
 
-Grid: ``(B, Hkv, K + 1)`` with the key axis innermost (sequential on
-TPU, accumulating online-softmax statistics in scratch).  The kv-head
-grid axis folds each GQA group's queries into one (group*n, Dk) tile,
-so a page is streamed exactly once per kv head per step — never once
-per query head (for MLA's latent MQA that is a single fetch for all H
-heads):
+``paged_decode_attention``
+    The decode-mode counterpart of ``block_diff_attn.py``: one
+    current-block query tile per sequence attends to its committed KV
+    directly in the shared pool (``models.attention.PagedAttnCache``).
+    Grid ``(B, Hkv, K + 1)`` with the key axis innermost (sequential on
+    TPU, accumulating online-softmax statistics in scratch): steps
+    ``j < K`` stream page ``table[b, j]``, step ``j == K`` attends the
+    block's own fresh K/V (the bidirectional self-block of blockwise
+    dLLM decode).  Per-tick transient decode memory is O(page), never
+    O(slots x K*bsz).
 
-* steps ``j < K`` load page ``table[b, j]`` from the pool (table entry
-  -1 — no page — loads the null page 0 and is masked invalid);
-* step ``j == K`` attends the block's own fresh K/V (the bidirectional
-  self-block of blockwise-dLLM decode).
+``paged_prefill_attention``
+    The plain-mode (committed-context) counterpart, serving the
+    shared-prefix *suffix prefill* (``core.decoding.prefill_suffix``):
+    suffix queries attend to (hit-prefix pages ++ suffix self keys).
+    Grid ``(B, Hkv, suffix_q_tiles, K_hit + suffix_kv_tiles)``; the kv
+    axis streams one prefix page or suffix block per step into a
+    compact VMEM scratch, and the final step replays the *reference*
+    chunk walk (``kernels.ops.chunked_masked_attention``: same
+    ``_pick_chunk`` kv-chunk boundaries, same scale -> softcap -> mask
+    -> online-(m, l) arithmetic, same dot shapes) over that scratch.
+    Because the scratch reproduces the gathered key layout
+    byte-for-byte (prefix pages in table order, then suffix, no
+    interleaved padding) and every op matches the reference walk, the
+    kernel's output is **bitwise identical** to the gathered
+    ``plain_paged`` path — and therefore to a full prefill — which is
+    the invariant ``serving/prefix_cache.py`` is built on
+    (tests/test_paged_attn.py pins it across GQA/MLA x window x
+    softcap x hit-depth grids).  Admission-time transient KV bytes
+    drop to zero: the gather that used to run per suffix admission is
+    replaced by per-page streaming inside the grid.
 
-Masking reproduces ``models.attention`` decode semantics byte-for-byte:
-a pool key is visible iff its block has a page (``table >= 0``), the
-slot is filled (``pos >= 0``) and committed for this sequence
-(``pos < cache_limit[b]``); self keys are always visible; a sliding
-window ``(q_pos - k_pos) < window`` applies to both.  Scores accumulate
-in f32 with the same scale -> softcap -> mask order as the reference.
+Masking reproduces ``models.attention`` semantics byte-for-byte.
+Decode: a pool key is visible iff its block has a page
+(``table >= 0``), the slot is filled (``pos >= 0``) and committed for
+this sequence (``pos < cache_limit[b]``); self keys are visible iff
+their position is filled (``pos >= 0`` — always true for real rows,
+false only for tile padding).  Prefill: a key is visible iff filled
+(``pos >= 0``) and block-causal (``k_pos // bsz <= q_pos // bsz``; the
+suffix self-block is bidirectional because its keys share the queries'
+blocks).  A sliding window ``(q_pos - k_pos) < window`` applies
+everywhere.  Scores accumulate in f32 with the same scale -> softcap ->
+mask order as the reference.
 
-Off-TPU the kernel auto-selects ``interpret=True`` so CPU CI runs the
-*real* kernel path (mirroring how ``block_diff_attn`` is validated
-against ``ref.mha_reference``).
-
-Memory plan (per grid step): q tile (n, Dk), one page of k/v
-((bsz, Dk)/(bsz, Dv)) + its (1, bsz) positions, f32 scratch acc
-(n, Dv) + running max / sum (n, 128 lanes).  VMEM is O(page), never
-O(sequence) — transient decode memory no longer scales with K.
+Execution planning (``plan_exec`` / ``KernelPlan``): off-TPU both
+kernels auto-select ``interpret=True`` so CPU CI runs the *real* kernel
+path.  On TPU, shapes below the (8, 128) f32 tile no longer fall back
+to interpret mode — ``pad=None`` auto-enables **tile padding**: head
+dims are zero-padded to a lane multiple (exact: the contraction gains
+trailing ``+0.0`` terms only) and pages are padded to a sublane
+multiple with ``pos = -1`` rows the validity mask hides (decode) or
+with only the real rows written into the compact scratch (prefill, so
+chunk boundaries — and bits — are unchanged).  ``plan_exec`` is the
+queryable record of the choice (mode, reason, padding) that
+``serving``/``launch.serve`` surface as a stat.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -48,9 +73,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .ops import _pick_chunk
 from .ref import NEG_INF
 
 _LANES = 128
+_SUBLANES = 8
+# reference chunk targets (kernels.ops.chunked_masked_attention
+# defaults) — the prefill kernel must reuse the kv target so its chunk
+# boundaries, and therefore its bits, match the gathered path
+_K_CHUNK = 1024
+_Q_CHUNK = 128
 
 
 def default_interpret() -> bool:
@@ -59,12 +91,89 @@ def default_interpret() -> bool:
 
 
 def _tile_aligned(bsz: int, dk: int, dv: int) -> bool:
-    """Shapes the compiled Mosaic path is known to lower: the f32 min
-    tile is (8, 128), so sub-tile pages (small ``block_size`` configs,
-    non-128-multiple head dims) stay on interpret mode even on TPU
-    until compiled-mode tile padding lands (ROADMAP follow-up) —
-    correct everywhere, compiled only where safe."""
-    return bsz % 8 == 0 and dk % _LANES == 0 and dv % _LANES == 0
+    """Shapes the compiled Mosaic path lowers without padding: the f32
+    min tile is (8, 128).  Sub-tile shapes (small ``block_size``
+    configs, non-128-multiple head dims) are zero-padded up to the tile
+    by ``plan_exec``'s auto mode instead of falling back to interpret
+    mode on TPU."""
+    return bsz % _SUBLANES == 0 and dk % _LANES == 0 and dv % _LANES == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """The execution mode a paged kernel will run under, and why.
+
+    ``mode``    "compiled" (Mosaic on TPU) | "interpret" (the same
+                kernel body evaluated op-by-op through XLA — the CPU CI
+                path, and the explicit-``interpret=True`` path on TPU).
+    ``reason``  human-readable cause: backend, tile alignment, padding.
+    ``padded``  tile padding active (sub-tile shapes lifted to the
+                (8, 128) f32 tile; masked/zero padding, bit-exact).
+    """
+    mode: str
+    reason: str
+    padded: bool
+
+    @property
+    def interpret(self) -> bool:
+        return self.mode == "interpret"
+
+
+def plan_exec(bsz: int, dk: int, dv: int, *,
+              interpret: bool | None = None,
+              pad: bool | None = None) -> KernelPlan:
+    """Resolve (interpret?, pad?) for page shape (bsz, dk, dv).
+
+    ``interpret=None`` auto-selects by backend (compiled on TPU only);
+    ``pad=None`` auto-enables tile padding exactly when compiling a
+    sub-tile shape.  Explicit booleans always win — tests force
+    ``interpret=True, pad=True`` to pin the padded path's bit-parity on
+    CPU, and ``pad=False`` on TPU falls back to interpret mode for
+    sub-tile shapes (the pre-padding behaviour).
+    """
+    backend = jax.default_backend()
+    aligned = _tile_aligned(bsz, dk, dv)
+    forced = interpret is not None
+    if interpret is None:
+        interpret = backend != "tpu"
+    if not interpret and not aligned and pad is None:
+        pad = True
+    if not interpret and not aligned and not pad:
+        return KernelPlan(
+            "interpret",
+            f"sub-tile page shape (bsz={bsz}, dk={dk}, dv={dv}) with "
+            "padding disabled", False)
+    padded = bool(pad)
+    if interpret:
+        reason = "interpret requested" if forced else \
+            f"backend={backend} (compiled Mosaic path needs a TPU)"
+        return KernelPlan("interpret", reason, padded)
+    reason = "tile-aligned page shape" if aligned else \
+        (f"sub-tile page shape (bsz={bsz}, dk={dk}, dv={dv}) "
+         "zero-padded to the (8, 128) tile")
+    return KernelPlan("compiled", reason, padded)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_dim(a: jax.Array, axis: int, target: int,
+             value=0) -> jax.Array:
+    """Pad ``axis`` up to ``target`` with ``value`` (no-op if already
+    there).  Zero-padding a contraction dim appends exact ``+0.0``
+    terms; position arrays pad with -1 so the validity mask hides the
+    rows."""
+    if a.shape[axis] == target:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, target - a.shape[axis])
+    return jnp.pad(a, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# decode kernel
+# ---------------------------------------------------------------------------
 
 
 def _kernel(table_ref, limit_ref, q_ref, kp_ref, vp_ref, pp_ref,
@@ -96,9 +205,10 @@ def _kernel(table_ref, limit_ref, q_ref, kp_ref, vp_ref, pp_ref,
     q_pos = qp_ref[0:1, :]                            # (1, n)
     k_pos = jnp.where(is_self, q_pos, pp_ref[0:1, :])  # (1, bsz)
     # pool keys: block mapped & slot filled & committed for this row;
-    # self keys: always visible (the bidirectional self block)
+    # self keys: filled (pos >= 0 — real rows always, tile-padding rows
+    # carry pos = -1 and stay invisible)
     page_ok = (t >= 0) & (k_pos >= 0) & (k_pos < lim)
-    valid = jnp.where(is_self, jnp.ones_like(page_ok), page_ok)
+    valid = jnp.where(is_self, k_pos >= 0, page_ok)
     if window is not None:
         valid = valid & ((q_pos.T - k_pos) < window)   # (n, bsz)
         valid = jnp.tile(valid, (group, 1))            # (group*n, bsz)
@@ -141,7 +251,8 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            scale: float,
                            softcap: float | None = None,
                            window: int | None = None,
-                           interpret: bool | None = None) -> jax.Array:
+                           interpret: bool | None = None,
+                           pad: bool | None = None) -> jax.Array:
     """Decode attention over (pool pages ++ self block), in place.
 
     q          (B, n, H, Dk)   current-block queries (n == page size)
@@ -154,10 +265,14 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     positions  (B, n) int32    the block's absolute positions
     cache_limit (B,) int32     pool keys visible iff pos < limit[b]
 
-    Returns (B, n, H, Dv) in q's dtype.  ``interpret=None`` auto-selects
-    interpret mode off-TPU — and on TPU whenever the page shapes fall
-    below the compiled path's (8, 128) f32 tile (``_tile_aligned``), so
-    the kernel is correct everywhere and compiled only where safe.
+    Returns (B, n, H, Dv) in q's dtype.  ``interpret``/``pad`` follow
+    ``plan_exec``: interpret mode off-TPU, tile padding for sub-tile
+    shapes on TPU.  Padding is bit-exact per construction — padded key
+    rows carry ``pos = -1`` (masked -> exact ``+0.0`` tail terms in the
+    softmax sum and the PV product), padded head dims are zero (exact
+    ``+0.0`` tail terms in the QK contraction) — so the padded kernel
+    matches the unpadded one bitwise (tests force ``pad=True`` on CPU
+    to pin this).
     """
     B, n, H, Dk = q.shape
     P, bsz, Hkv, _ = k_pages.shape
@@ -166,8 +281,22 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     assert n == bsz, (n, bsz)     # decode block == page granularity
     assert H % Hkv == 0
     group = H // Hkv
-    if interpret is None:
-        interpret = default_interpret() or not _tile_aligned(bsz, Dk, Dv)
+    plan = plan_exec(bsz, Dk, Dv, interpret=interpret, pad=pad)
+    if plan.padded:
+        bp = _ceil_to(bsz, _SUBLANES)
+        dkp, dvp = _ceil_to(Dk, _LANES), _ceil_to(Dv, _LANES)
+        q = _pad_dim(_pad_dim(q, 1, bp), 3, dkp)
+        k_pages = _pad_dim(_pad_dim(k_pages, 1, bp), 3, dkp)
+        v_pages = _pad_dim(_pad_dim(v_pages, 1, bp), 3, dvp)
+        pos_pages = _pad_dim(pos_pages, 1, bp, value=-1)
+        k_self = _pad_dim(_pad_dim(k_self, 1, bp), 3, dkp)
+        v_self = _pad_dim(_pad_dim(v_self, 1, bp), 3, dvp)
+        positions = _pad_dim(positions, 1, bp, value=-1)
+        out = paged_decode_attention(
+            q, k_pages, v_pages, pos_pages, table, k_self, v_self,
+            positions, cache_limit, scale=scale, softcap=softcap,
+            window=window, interpret=plan.interpret, pad=False)
+        return out[:, :n, :, :Dv]
 
     # grid iterates KV heads, not query heads: head h attends kv head
     # h // group, so the whole group's queries are folded into one
@@ -222,8 +351,230 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, group * n, Dv), q.dtype),
-        interpret=interpret,
+        interpret=plan.interpret,
     )(table.astype(jnp.int32), cache_limit.astype(jnp.int32),
       qh, k_pages, v_pages, pos_pages, ksh, vsh,
       positions.astype(jnp.int32))
     return out.reshape(B, H, n, Dv).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# prefill kernel (plain mode: suffix queries vs prefix pages ++ self)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(table_ref, q_ref, kp_ref, vp_ref, pp_ref,
+                    ks_ref, vs_ref, sp_ref, qp_ref, o_ref,
+                    k_s, v_s, pos_s, *,
+                    scale: float, softcap: float | None,
+                    window: int | None, group: int, bsz: int, Kp: int,
+                    kc: int):
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+    n_kv = pl.num_programs(3)        # Kp prefix pages + Ts suffix blocks
+    is_pfx = j < Kp
+
+    # --- stream this step's block into the compact scratch ------------
+    # prefix pages cast to the activation dtype on write (the reference
+    # gathers with ``ck.astype(k_self.dtype)``); only the *real* bsz
+    # rows of a (possibly tile-padded) fetched block are written, so
+    # the scratch reproduces the gathered key layout exactly — prefix
+    # pages in table order, then the suffix, no interleaved padding —
+    # and the reference chunk boundaries land on the same keys
+    t = table_ref[b, jnp.minimum(j, Kp - 1)] if Kp else jnp.int32(-1)
+    k_blk = jnp.where(is_pfx, kp_ref[0, :, 0, :].astype(k_s.dtype),
+                      ks_ref[0, 0, 0])
+    v_blk = jnp.where(is_pfx, vp_ref[0, :, 0, :].astype(v_s.dtype),
+                      vs_ref[0, 0, 0])
+    pos_pfx = jnp.where(t >= 0, pp_ref[0, :], -1)
+    pos_blk = jnp.where(is_pfx, pos_pfx, sp_ref[0, 0])
+    k_s[pl.ds(j * bsz, bsz), :] = k_blk[:bsz]
+    v_s[pl.ds(j * bsz, bsz), :] = v_blk[:bsz]
+    pos_s[pl.ds(j * bsz, bsz), :] = pos_blk[:bsz, None]
+
+    # --- final kv step: the reference chunk walk over the scratch -----
+    @pl.when(j == n_kv - 1)
+    def _attend():
+        qf = q_ref[0, 0]                         # (group, qc, Dk)
+        g, qc, _ = qf.shape
+        qf = qf.reshape(g * qc, qf.shape[-1])
+        q_pos = qp_ref[0, :]                     # (qc,)
+        qb = q_pos // bsz
+        Lk = n_kv * bsz
+        dv = v_s.shape[-1]
+        acc = jnp.zeros((g * qc, dv), jnp.float32)
+        m = jnp.full((g * qc, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((g * qc, 1), jnp.float32)
+        # static unroll: kc = _pick_chunk(Lk, 1024) — the *reference*
+        # kv chunking, so each chunk's (m, l) rescale groups exactly
+        # the keys chunked_masked_attention groups
+        for ki in range(Lk // kc):
+            ks = k_s[ki * kc:(ki + 1) * kc, :]
+            vs = v_s[ki * kc:(ki + 1) * kc, :]
+            kpos = pos_s[ki * kc:(ki + 1) * kc, 0]          # (kc,)
+            s = jax.lax.dot_general(
+                qf, ks, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            # plain-mode visibility: filled & block-causal (& window) —
+            # models.attention builds exactly this from the gathered
+            # positions (core.masks.visibility, all-copy-A layout)
+            vis = (kpos >= 0)[None, :] \
+                & ((kpos // bsz)[None, :] <= qb[:, None])
+            if window is not None:
+                vis = vis & ((q_pos[:, None] - kpos[None, :]) < window)
+            vis = jnp.tile(vis, (g, 1))          # (g*qc, kc), g-major
+            s = jnp.where(vis, s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new) * vis
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jax.lax.dot_general(
+                p.astype(vs.dtype), vs, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m = m_new
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc / l).astype(o_ref.dtype).reshape(g, qc, dv)
+
+
+def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, pos_pages: jax.Array,
+                            context_table: jax.Array, k_self: jax.Array,
+                            v_self: jax.Array, positions: jax.Array, *,
+                            scale: float,
+                            softcap: float | None = None,
+                            window: int | None = None,
+                            interpret: bool | None = None,
+                            pad: bool | None = None) -> jax.Array:
+    """Plain-mode attention of suffix queries over (prefix pages ++
+    suffix self keys), reading the pool in place.
+
+    q             (B, T, H, Dk)   suffix queries, T a block multiple
+    k_pages       (P, bsz, Hkv, Dk) shared pool, rotated keys
+    v_pages       (P, bsz, Hkv, Dv)
+    pos_pages     (P, bsz) int32  absolute positions, -1 = empty slot
+    context_table (B, Kp) int32   hit-prefix block -> page (-1 masked)
+    k_self        (B, T, Hkv, Dk) the suffix's own fresh keys
+    v_self        (B, T, Hkv, Dv)
+    positions     (B, T) int32    absolute suffix positions (all valid
+                                  — the ``prefill_suffix`` layout)
+
+    Returns (B, T, H, Dv) in q's dtype, **bitwise identical** to the
+    gathered path (``models.attention`` ``_paged_context_kv`` +
+    ``kernels.ops.chunked_masked_attention``): the kernel streams
+    blocks into a compact scratch reproducing the gathered key layout,
+    then replays the reference chunk walk — same kv-chunk boundaries
+    (``_pick_chunk(Lk, 1024)``), same op order, same dot shapes.  Holds
+    for ``attn_impl`` "structured"/"chunked" (both route plain passes
+    through ``chunked_masked_attention``); the dense-mask "ref" impl
+    agrees to rounding only.
+
+    ``interpret``/``pad`` follow ``plan_exec``.  Tile padding pads the
+    *DMA* block shapes; the scratch stays compact (real rows only), so
+    padding never moves a chunk boundary and parity stays bitwise.
+
+    Caveat: the replay makes the *kernel-side* op order identical, but
+    XLA may still reassociate the softmax-denominator reduction
+    (``jnp.sum(p, -1)``) differently when compiling the reference's
+    ``lax.scan`` body at some shapes — observed at Dk=Dv=96/Lk=20,
+    where only ``l`` diverges (~1e-7 in the output) while ``m`` and
+    ``acc`` stay bitwise.  At the repo's model shapes (head dims
+    16–40, block sizes 8/16 — pinned by tests/test_paged_attn.py) the
+    compiled orders coincide and parity is exactly bitwise; padded vs
+    unpadded kernel runs are bitwise at *every* shape.
+    """
+    B, T, H, Dk = q.shape
+    P, bsz, Hkv, _ = k_pages.shape
+    Dv = v_pages.shape[-1]
+    Kp = context_table.shape[1]
+    assert T % bsz == 0, (T, bsz)
+    assert H % Hkv == 0
+    Ts = T // bsz
+    group = H // Hkv
+    plan = plan_exec(bsz, Dk, Dv, interpret=interpret, pad=pad)
+    dkp, dvp, bp = Dk, Dv, bsz
+    if plan.padded:
+        bp = _ceil_to(bsz, _SUBLANES)
+        dkp, dvp = _ceil_to(Dk, _LANES), _ceil_to(Dv, _LANES)
+        q = _pad_dim(q, 3, dkp)
+        k_pages = _pad_dim(_pad_dim(k_pages, 1, bp), 3, dkp)
+        v_pages = _pad_dim(_pad_dim(v_pages, 1, bp), 3, dvp)
+        pos_pages = _pad_dim(pos_pages, 1, bp, value=-1)
+        k_self = _pad_dim(k_self, 3, dkp)
+        v_self = _pad_dim(v_self, 3, dvp)
+
+    Lk = (Kp + Ts) * bsz
+    qc = _pick_chunk(T, _Q_CHUNK)
+    kc = _pick_chunk(Lk, _K_CHUNK)
+    nq = T // qc
+
+    # fold queries per kv head (g-major rows — the reference einsum's
+    # "bqhgd,bkhd->bhgqk" row order) and expose suffix K/V block-wise
+    # so the kv grid axis can stream one block per step
+    q5 = q.transpose(0, 2, 1, 3).reshape(B, Hkv, group, T, dkp)
+    ks5 = k_self.reshape(B, Ts, bsz, Hkv, dkp).transpose(0, 1, 3, 2, 4)
+    vs5 = v_self.reshape(B, Ts, bsz, Hkv, dvp).transpose(0, 1, 3, 2, 4)
+    if plan.padded:
+        ks5 = _pad_dim(ks5, 3, bp)
+        vs5 = _pad_dim(vs5, 3, bp)
+    spos = positions.reshape(B, Ts, bsz)
+    if plan.padded:
+        spos = _pad_dim(spos, 2, bp, value=-1)
+    table = context_table.astype(jnp.int32)
+    if Kp == 0:  # degenerate no-prefix call: keep the prefetch 2-D
+        table = jnp.full((B, 1), -1, jnp.int32)
+
+    def q_map(b, h, qt, j, tr):
+        return (b, h, 0, qt, 0)
+
+    def page_map(b, h, qt, j, tr):
+        page = tr[b, jnp.minimum(j, max(Kp - 1, 0))]
+        return (jnp.maximum(page, 0), 0, h, 0)
+
+    def ppos_map(b, h, qt, j, tr):
+        page = tr[b, jnp.minimum(j, max(Kp - 1, 0))]
+        return (jnp.maximum(page, 0), 0)
+
+    def self_map(b, h, qt, j, tr):
+        return (b, jnp.clip(j - Kp, 0, Ts - 1), h, 0, 0)
+
+    def spos_map(b, h, qt, j, tr):
+        return (b, jnp.clip(j - Kp, 0, Ts - 1), 0)
+
+    def qpos_map(b, h, qt, j, tr):
+        return (b, qt)
+
+    kern = functools.partial(_prefill_kernel, scale=scale,
+                             softcap=softcap, window=window, group=group,
+                             bsz=bsz, Kp=Kp, kc=kc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nq, Kp + Ts),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, qc, dkp), q_map),
+            pl.BlockSpec((1, bp, 1, dkp), page_map),
+            pl.BlockSpec((1, bp, 1, dvp), page_map),
+            pl.BlockSpec((1, bp), ppos_map),
+            pl.BlockSpec((1, 1, 1, bp, dkp), self_map),
+            pl.BlockSpec((1, 1, 1, bp, dvp), self_map),
+            pl.BlockSpec((1, 1, bp), spos_map),
+            pl.BlockSpec((1, qc), qpos_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, qc, dvp), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((Lk, dkp), k_self.dtype),
+            pltpu.VMEM((Lk, dvp), v_self.dtype),
+            pltpu.VMEM((Lk, 1), jnp.int32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, T, dvp), q.dtype),
+        interpret=plan.interpret,
+    )(table, q5, k_pages, v_pages, pos_pages, ks5, vs5,
+      spos.astype(jnp.int32), positions.astype(jnp.int32))
+    out = out.reshape(B, H, T, dvp).transpose(0, 2, 1, 3)
+    return out[..., :Dv] if plan.padded else out

@@ -11,9 +11,12 @@ request-granular decode path (no engine rebuild, no retrace per
 config).  A single value behaves as before.
 
 ``--cache paged --kernel pallas`` serves the pool through the in-place
-page-aware decode kernel (``kernels.paged_attn``); the stats line then
-reports the per-tick transient KV copy (0 in place vs the gathered
-fallback's dense-width bytes).
+page-aware kernels (``kernels.paged_attn`` — decode and suffix
+prefill); the stats line then reports the per-tick and admission-time
+transient KV copies (0 in place vs the gathered fallback's dense-width
+bytes) plus the kernels' execution mode — ``compiled`` or
+``interpret``, and why — so TPU users can see when a sub-tile page
+shape or a non-TPU backend silently put them on the slow path.
 """
 
 from __future__ import annotations
@@ -132,7 +135,11 @@ def main():
         if args.cache == "paged":
             line += (f" | kernel {args.kernel} "
                      f"(transient KV {s.transient_kv_bytes / 1024:.0f} "
-                     f"KiB/tick)")
+                     f"KiB/tick, admit "
+                     f"{s.admit_transient_kv_bytes / 1024:.0f} KiB)")
+            plan = engine.scheduler.kernel_plan
+            if plan is not None:
+                line += f" | exec {plan.mode}: {plan.reason}"
         if mixed:
             line += (f" | {engine.scheduler.n_advance_traces} advance "
                      f"trace(s) across {args.requests} mixed requests")

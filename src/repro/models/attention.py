@@ -13,8 +13,9 @@ KV caches store *rotated* keys with explicit position ids so sliding-window
 ring buffers and sequence-sharded caches need no extra bookkeeping:
 ``pos < 0`` marks unfilled slots.
 
-Decode reads dispatch through one **KV-layout object**
-(``resolve_kv_layout``) — the strategy that decides how a layer's
+Every paged-KV attention pass — per-step decode *and* admission-time
+suffix prefill — dispatches through one **KV-layout object**
+(``resolve_kv_layout``), the strategy that decides how a layer's
 cached keys reach the attention math:
 
 * ``dense``     (``AttnCache``) — every sequence owns a contiguous
@@ -24,23 +25,35 @@ cached keys reach the attention math:
                 reference.
 * ``gathered``  (``PagedAttnCache``, ``kernel="ref"``) — the shared
                 page pool is gathered through the per-sequence block
-                table into a dense-width copy, then runs the *same*
-                concat path — the portable fallback, byte-identical to
-                ``dense`` by construction.
+                table into a dense-width copy; decode runs the *same*
+                concat path as ``dense`` and suffix prefill runs the
+                full-prefill chunked kernel over (gathered prefix ++
+                suffix) keys — the portable fallback, byte-identical
+                to the dense paths by construction.
 * ``paged``     (``PagedAttnCache``, ``kernel="pallas"``) — the
-                ``kernels.paged_attn`` Pallas kernel reads the pool
-                **in place**, one page per grid step via the
-                scalar-prefetched block table: no dense-width K/V copy
-                is ever materialized, so transient decode memory stops
-                scaling with slots x K*bsz (off-TPU the kernel runs
-                under ``interpret=True``, so CPU CI exercises the real
-                path).
+                ``kernels.paged_attn`` family reads the pool
+                **in place**: ``paged_decode_attention`` for the
+                denoise step and ``paged_prefill_attention`` for the
+                shared-prefix suffix prefill, each streaming one page
+                per grid step via the scalar-prefetched block table.
+                No dense-width K/V copy is ever materialized, so
+                transient decode memory stops scaling with
+                slots x K*bsz and admission-time transient bytes drop
+                to zero (off-TPU the kernels run under
+                ``interpret=True``, so CPU CI exercises the real
+                path; sub-tile page shapes are zero-padded to the
+                (8, 128) f32 tile so real TPUs stay on the compiled
+                path — see ``kernels.paged_attn.plan_exec``).
 
-All three layouts implement the same masking contract — null page 0,
+All layouts implement the same masking contract — null page 0,
 ``pos = -1`` empty slots, per-row ``cache_limit``, sliding window, and
-the MLA latent-MQA form — and produce byte-identical decode tokens
-(tests/test_paged_attn.py).  ``transient_kv_bytes`` quantifies the
-per-step copy each layout pays (0 for the in-place kernel).
+the MLA latent-MQA form — and produce byte-identical decode tokens and
+suffix-prefill activations (tests/test_paged_attn.py).
+``transient_kv_bytes`` quantifies the per-decode-step copy each layout
+pays and ``prefill_transient_kv_bytes`` the admission-time gather
+width (both 0 for the in-place kernels); ``kernel_exec_plan`` reports
+whether the Pallas path would compile or interpret on this backend,
+and why.
 """
 
 from __future__ import annotations
@@ -320,28 +333,29 @@ def gqa_masked(p, x, meta: SeqMeta, cfg: ModelConfig, *,
 
 def gqa_plain_paged(p, x, meta: SeqMeta, cache: PagedAttnCache,
                     cfg: ModelConfig, *, window: int | None,
-                    context_table: jax.Array, write_pages: jax.Array
+                    context_table: jax.Array, write_pages: jax.Array,
+                    kernel: str = "ref"
                     ) -> tuple[jax.Array, PagedAttnCache]:
     """Plain committed pass over a prompt *suffix* against shared pages.
 
     ``x``/``meta`` cover only the suffix rows (absolute positions);
-    attention keys are the shared-prefix pages gathered through
-    ``context_table`` followed by the suffix's own K/V — the same key
-    layout, kernel and chunking as the full plain pass, so the computed
-    suffix KV (committed into ``write_pages``) is bitwise identical to
-    what a full prefill would have produced (when the cache dtype equals
-    the activation dtype; see core.decoding.prefill_suffix).
+    attention keys are the shared-prefix pages behind ``context_table``
+    followed by the suffix's own K/V — the same key layout and masking
+    as the full plain pass, so the computed suffix KV (committed into
+    ``write_pages``) is bitwise identical to what a full prefill would
+    have produced (when the cache dtype equals the activation dtype;
+    see core.decoding.prefill_suffix).  ``kernel`` picks how the prefix
+    pages are read: ``"ref"`` gathers them into a dense-width copy,
+    ``"pallas"`` streams them in place (``paged_prefill_attention``),
+    eliminating the admission-time transient.
     """
     B, T, _ = x.shape
     q, k, v = gqa_qkv(p, x, meta.pos, cfg)
-    keys, vals, k_meta = _paged_context_kv(cache, context_table, k, v,
-                                           meta, cfg.block_size)
-    o = kops.attention(
-        q, keys, vals, meta, k_meta,
-        impl=cfg.attn_impl,
-        scale=_gqa_scale(cfg), softcap=cfg.attn_logit_softcap or None,
-        window=window, strict=False, dup_len=None,
-        block_size=cfg.block_size)
+    o = resolve_kv_layout(cache, kernel).prefill_attend(
+        q, k, v, meta, cache,
+        context_table=context_table, block_size=cfg.block_size,
+        impl=cfg.attn_impl, scale=_gqa_scale(cfg),
+        softcap=cfg.attn_logit_softcap or None, window=window)
     new_cache = write_suffix_pages(cache, k, v, meta.pos, write_pages)
     return linear(p["wo"], o.reshape(B, T, -1)), new_cache
 
@@ -374,22 +388,35 @@ def _decode_key_mask(cache_pos, positions, cache_limit):
 
 
 class KVLayout:
-    """Strategy object behind ``gqa_decode``/``mla_decode``.
+    """Strategy object behind ``gqa_decode``/``mla_decode`` and the
+    ``*_plain_paged`` suffix-prefill passes.
 
     One layout = one answer to "how do the committed keys reach the
     attention math": read the dense buffer, gather the page pool into a
-    dense-width copy, or run the page-aware kernel over the pool in
-    place.  All layouts share the masking contract (``pos = -1`` empty,
-    ``cache_limit``, sliding window, null page) and the commit path's
-    write discipline; ``transient_bytes`` reports the per-step cache-KV
-    copy the layout materializes outside the resident cache (the
-    capacity tax the in-place kernel removes).
+    dense-width copy, or run the page-aware kernels over the pool in
+    place.  Two entry points per layout — ``attend`` (decode step) and
+    ``prefill_attend`` (plain pass over a prompt suffix against
+    shared-prefix pages).  All layouts share the masking contract
+    (``pos = -1`` empty, ``cache_limit``, sliding window, null page)
+    and the commit path's write discipline; ``transient_bytes`` /
+    ``prefill_transient_bytes`` report the cache-KV copy each pass
+    materializes outside the resident cache (the capacity tax the
+    in-place kernels remove).
     """
 
     kind = "?"
 
     def attend(self, q, k_self, v_self, positions, cache, *, block_table,
                cache_limit, scale, softcap, window):
+        raise NotImplementedError
+
+    def prefill_attend(self, q, k_self, v_self, meta, cache, *,
+                       context_table, block_size, impl, scale, softcap,
+                       window):
+        """Plain-mode pass of suffix queries over (shared-prefix pages
+        ++ suffix self keys); must be bitwise equal to the full-prefill
+        chunked kernel over the same key layout (the
+        ``serving.prefix_cache`` invariant)."""
         raise NotImplementedError
 
     def commit(self, cache, k_self, v_self, positions, block_table):
@@ -415,6 +442,11 @@ class KVLayout:
     def transient_bytes(cache, n_rows: int, n_blocks: int) -> int:
         return 0
 
+    @staticmethod
+    def prefill_transient_bytes(cache, n_rows: int,
+                                n_ctx_blocks: int) -> int:
+        return 0
+
 
 class _DenseKV(KVLayout):
     """Contiguous per-sequence cache rows; decode concatenates the row
@@ -437,8 +469,9 @@ class _DenseKV(KVLayout):
 
 class _GatheredPagedKV(KVLayout):
     """``kernel="ref"``: gather the pool through the block table into a
-    dense-width copy, then run the identical concat path — the portable
-    fallback and the parity oracle for the in-place kernel."""
+    dense-width copy, then run the identical concat / full-prefill
+    paths — the portable fallback and the parity oracle for the
+    in-place kernels."""
 
     kind = "gathered"
 
@@ -450,16 +483,33 @@ class _GatheredPagedKV(KVLayout):
             cache_limit=cache_limit, scale=scale, softcap=softcap,
             window=window)
 
+    def prefill_attend(self, q, k_self, v_self, meta, cache, *,
+                       context_table, block_size, impl, scale, softcap,
+                       window):
+        keys, vals, k_meta = _paged_context_kv(
+            cache, context_table, k_self, v_self, meta, block_size)
+        return kops.attention(
+            q, keys, vals, meta, k_meta, impl=impl, scale=scale,
+            softcap=softcap, window=window, strict=False, dup_len=None,
+            block_size=block_size)
+
     @staticmethod
     def transient_bytes(cache, n_rows: int, n_blocks: int) -> int:
         bsz = cache.k.shape[-3]
         return n_rows * n_blocks * bsz * _kv_token_bytes(cache)
 
+    @staticmethod
+    def prefill_transient_bytes(cache, n_rows: int,
+                                n_ctx_blocks: int) -> int:
+        bsz = cache.k.shape[-3]
+        return n_rows * n_ctx_blocks * bsz * _kv_token_bytes(cache)
+
 
 class _InplacePagedKV(KVLayout):
-    """``kernel="pallas"``: the page-aware kernel reads the pool in
+    """``kernel="pallas"``: the page-aware kernels read the pool in
     place (one page per grid step via the scalar-prefetched block
-    table) — no dense-width K/V copy exists at any point."""
+    table) — no dense-width K/V copy exists at any point, decode or
+    admission."""
 
     kind = "paged"
 
@@ -475,6 +525,15 @@ class _InplacePagedKV(KVLayout):
         return paged_decode_attention(
             q, cache.k, cache.v, cache.pos, block_table,
             k_self, v_self, positions, lim,
+            scale=scale, softcap=softcap, window=window)
+
+    def prefill_attend(self, q, k_self, v_self, meta, cache, *,
+                       context_table, block_size, impl, scale, softcap,
+                       window):
+        from repro.kernels.paged_attn import paged_prefill_attention
+        return paged_prefill_attention(
+            q, cache.k, cache.v, cache.pos, context_table,
+            k_self, v_self, meta.pos,
             scale=scale, softcap=softcap, window=window)
 
 
@@ -515,6 +574,29 @@ def transient_kv_bytes(cache, n_rows: int, n_blocks: int,
     transient); 0 for the in-place kernel path."""
     return resolve_kv_layout(cache, kernel).transient_bytes(
         cache, n_rows, n_blocks)
+
+
+def prefill_transient_kv_bytes(cache, n_rows: int, n_ctx_blocks: int,
+                               kernel: str = "ref") -> int:
+    """Admission-time cache-KV bytes one layer's suffix prefill copies
+    out of the resident cache: the shared-prefix gather width
+    (``n_rows`` admitted rows x ``n_ctx_blocks`` hit pages) for the
+    gathered layout, 0 for the in-place prefill kernel."""
+    return resolve_kv_layout(cache, kernel).prefill_transient_bytes(
+        cache, n_rows, n_ctx_blocks)
+
+
+def kernel_exec_plan(cache, kernel: str = "ref"):
+    """How the paged kernels would execute on this cache: a
+    ``kernels.paged_attn.KernelPlan`` (mode ``compiled``/``interpret``
+    plus the reason — backend vs tile shape vs padding), or ``None``
+    when the layout never launches a Pallas kernel (``kernel="ref"`` or
+    a dense cache)."""
+    if kernel != "pallas" or not isinstance(cache, PagedAttnCache):
+        return None
+    from repro.kernels.paged_attn import plan_exec
+    bsz = cache.k.shape[-3]
+    return plan_exec(bsz, cache.k.shape[-1], cache.v.shape[-1])
 
 
 def gqa_decode(p, x, positions, cache, cfg: ModelConfig, *,
@@ -635,19 +717,20 @@ def mla_masked(p, x, meta: SeqMeta, cfg: ModelConfig, *,
 
 def mla_plain_paged(p, x, meta: SeqMeta, cache: PagedAttnCache,
                     cfg: ModelConfig, *, window: int | None,
-                    context_table: jax.Array, write_pages: jax.Array
+                    context_table: jax.Array, write_pages: jax.Array,
+                    kernel: str = "ref"
                     ) -> tuple[jax.Array, PagedAttnCache]:
-    """``gqa_plain_paged`` for the absorbed-MLA mixer (latent KV pages)."""
+    """``gqa_plain_paged`` for the absorbed-MLA mixer (latent KV pages):
+    the latent MQA form (Hkv = 1, Dk = r+rope != Dv = r) rides the same
+    prefill KV layouts."""
     B, T, _ = x.shape
     q = _mla_q_latent(p, x, meta.pos, cfg)
     k, v = _mla_kv_latent(p, x, meta.pos, cfg)
-    keys, vals, k_meta = _paged_context_kv(cache, context_table, k, v,
-                                           meta, cfg.block_size)
-    o = kops.attention(
-        q, keys, vals, meta, k_meta,
-        impl=cfg.attn_impl,
-        scale=_mla_scale(cfg), softcap=None, window=window,
-        strict=False, dup_len=None, block_size=cfg.block_size)
+    o = resolve_kv_layout(cache, kernel).prefill_attend(
+        q, k, v, meta, cache,
+        context_table=context_table, block_size=cfg.block_size,
+        impl=cfg.attn_impl, scale=_mla_scale(cfg), softcap=None,
+        window=window)
     new_cache = write_suffix_pages(cache, k, v, meta.pos, write_pages)
     return _mla_out(p, o, cfg), new_cache
 

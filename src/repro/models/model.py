@@ -154,7 +154,7 @@ def _apply_mixer(cfg: ModelConfig, spec: LayerSpec, lp, h, ctx: LayerCtx,
                 y, new_cache = paged_fn(
                     lp["attn"], h, ctx.meta, cache, cfg,
                     window=spec.window, context_table=ctx.context_table,
-                    write_pages=ctx.write_pages)
+                    write_pages=ctx.write_pages, kernel=ctx.kv_kernel)
                 return y, new_cache, None
             y, k, v = masked_fn(lp["attn"], h, ctx.meta, cfg,
                                 window=spec.window, dup_len=ctx.dup_len,
@@ -525,11 +525,12 @@ class BlockDiffLM:
         recurrent layers carry per-slot state that pages cannot share
         (the scheduler gates prefix caching off for them).
 
-        ``kv_kernel`` threads the pool's KV-layout choice through the
-        context; the plain-paged pass itself still gathers the prefix
-        pages (the gather width is the hit prefix, paid once per
-        admission — an in-place plain-mode kernel is the remaining
-        follow-up, see ROADMAP).
+        ``kv_kernel`` picks the prefill KV layout (attention.
+        resolve_kv_layout): ``"ref"`` gathers the hit-prefix pages into
+        a dense-width copy once per admission, ``"pallas"`` streams
+        them in place (``kernels.paged_attn.paged_prefill_attention``),
+        so admission pays zero transient KV bytes.  Both produce
+        bitwise-identical suffix KV.
         """
         ctx = LayerCtx(mode="plain", meta=meta,
                        context_table=context_table,

@@ -46,8 +46,11 @@ All layouts produce byte-identical tokens; ``EngineStats.
 prefix_hit_rate`` reports the fraction of prompt blocks served from
 shared pages.  Paged pools additionally choose how decode *reads* the
 pool via ``kernel="ref"|"pallas"`` — the gathered fallback vs the
-in-place page-aware Pallas kernel; ``EngineStats.transient_kv_bytes``
-reports the per-tick K/V copy the chosen layout pays (0 in-place).
+in-place page-aware Pallas kernels (decode + suffix prefill);
+``EngineStats.transient_kv_bytes`` / ``admit_transient_kv_bytes``
+report the per-tick and admission-time K/V copies the chosen layout
+pays (both 0 in-place), ``kernel_mode`` whether the kernels compile
+or interpret on this backend.
 
 The engine reads weights from a ``ModelServer`` (in-place updates) or
 ``OfflineWeightStore`` (checkpoint baseline) — swapping one for the
@@ -92,6 +95,12 @@ class EngineStats:
     # copies out of the resident cache (scheduler.stats mirror; 0 on
     # the in-place kernel="pallas" path)
     transient_kv_bytes: int = 0
+    # continuous: peak admission-time cache-KV bytes one suffix prefill
+    # gathered out of the pool (scheduler.stats mirror; 0 in-place)
+    admit_transient_kv_bytes: int = 0
+    # execution mode of the paged Pallas kernels ("compiled" |
+    # "interpret", "" when no kernel is launched)
+    kernel_mode: str = ""
     # continuous: per-completion admit -> finish latency, in scheduler
     # ticks (one tick = one block-advance over the pool).  Bounded: a
     # long-lived server keeps the most recent window, not every request
@@ -159,6 +168,7 @@ class RolloutEngine:
             self._sched = SlotScheduler(self.model, self.gen_cfg)
             self.stats.transient_kv_bytes = \
                 self._sched.transient_kv_bytes
+            self.stats.kernel_mode = self._sched.stats.kernel_mode
         return self._sched
 
     # ------------------------------------------------------- sampling
@@ -311,6 +321,9 @@ class RolloutEngine:
         miss = sched.stats.prefix_miss_blocks - miss0
         self.stats.prefix_hit_blocks += hit
         self.stats.prefix_miss_blocks += miss
+        self.stats.admit_transient_kv_bytes = max(
+            self.stats.admit_transient_kv_bytes,
+            sched.stats.admit_transient_kv_bytes)
         self.last_call = {
             "batching": "continuous",
             "ticks": sched.stats.ticks - ticks0,
@@ -376,6 +389,9 @@ class RolloutEngine:
                     sched.stats.prefix_hit_blocks - hit0
                 self.stats.prefix_miss_blocks += \
                     sched.stats.prefix_miss_blocks - miss0
+                self.stats.admit_transient_kv_bytes = max(
+                    self.stats.admit_transient_kv_bytes,
+                    sched.stats.admit_transient_kv_bytes)
             # pop-one/yield-one: if the consumer abandons the generator
             # mid-iteration, undelivered completions stay in _pending
             # for the next stream() call

@@ -61,13 +61,17 @@ Cache layouts (``cache=``)
                * ``"ref"``    — ``paged_gather`` materializes a
                  dense-width K/V copy per layer per tick (portable
                  fallback / parity oracle);
-               * ``"pallas"`` — the page-aware kernel
-                 (``kernels.paged_attn``) reads pages in place via the
-                 scalar-prefetched block table, so per-step transient
-                 KV drops to zero (``stats.transient_kv_bytes``) and
-                 decode memory stops scaling with slots x K*bsz.
-                 Off-TPU it runs under ``interpret=True`` — CI
-                 exercises the real kernel path.
+               * ``"pallas"`` — the page-aware kernels
+                 (``kernels.paged_attn``) read pages in place via the
+                 scalar-prefetched block table — decode *and* the
+                 shared-prefix suffix prefill — so per-step transient
+                 KV drops to zero (``stats.transient_kv_bytes``), the
+                 admission-time prefix gather disappears
+                 (``stats.admit_transient_kv_bytes``) and decode
+                 memory stops scaling with slots x K*bsz.  Off-TPU
+                 they run under ``interpret=True`` — CI exercises the
+                 real kernel path; ``kernel_plan`` records the
+                 compiled/interpret choice and why.
 
              Both layouts are byte-identical in decode tokens to dense
              (tests/test_paged_attn.py), and the kernel choice is a
@@ -137,8 +141,7 @@ maps (tested in tests/test_scheduler.py), so RL rollouts harvested from
 the scheduler remain exactly consumable by the DiPO trajectory replay.
 
 Follow-ups tracked in ROADMAP.md: multi-host page pools, batched
-same-width admission, an in-place plain-mode kernel for suffix
-prefill, and optimistic admission + preemption.
+same-width admission, and optimistic admission + preemption.
 """
 
 from __future__ import annotations
@@ -202,6 +205,13 @@ class SchedulerStats:
     # resident cache (max over layers: dense concat / paged gather);
     # 0 on the in-place kernel="pallas" path — static per pool config
     transient_kv_bytes: int = 0
+    # peak admission-time cache-KV bytes one suffix prefill gathered
+    # out of the pool (the hit-prefix width, max over layers and over
+    # admissions so far); 0 on the in-place prefill kernel path
+    admit_transient_kv_bytes: int = 0
+    # execution mode of the paged Pallas kernels for this pool shape:
+    # "compiled" | "interpret" (kernel="pallas") or "" (no kernel)
+    kernel_mode: str = ""
     # paged cache only
     deferred: int = 0            # admissions deferred for lack of pages
     page_allocs: int = 0
@@ -313,6 +323,11 @@ class SlotScheduler:
         # warmup pattern `sched.stats = SchedulerStats()` self-heals
         self.transient_kv_bytes = self._transient_kv_bytes()
         self.stats.transient_kv_bytes = self.transient_kv_bytes
+        # how the paged Pallas kernels would execute on this pool's
+        # page shape (None when kernel="ref" / dense cache)
+        self.kernel_plan = self._kernel_plan()
+        self.stats.kernel_mode = \
+            self.kernel_plan.mode if self.kernel_plan else ""
 
         # donate the pool state: the old GenState (slot caches included)
         # is always dead after the call, so advance/admit alias their
@@ -351,6 +366,34 @@ class SlotScheduler:
                               attention.PagedAttnCache)):
                 out = max(out, attention.transient_kv_bytes(
                     c, self.n_slots, self.n_blocks_total, self.kernel))
+        return out
+
+    def _attn_caches(self):
+        caches = self._state.caches
+        return [c for c in (list(caches["prefix"].values())
+                            + list(caches["groups"].values()))
+                if isinstance(c, (attention.AttnCache,
+                                  attention.PagedAttnCache))]
+
+    def _kernel_plan(self):
+        """``kernels.paged_attn.KernelPlan`` for this pool's page shape,
+        or None when no Pallas kernel is ever launched."""
+        for c in self._attn_caches():
+            plan = attention.kernel_exec_plan(c, self.kernel)
+            if plan is not None:
+                return plan
+        return None
+
+    def _admit_transient_kv_bytes(self, n_ctx_blocks: int) -> int:
+        """Cache-KV bytes one B=1 suffix prefill copies out of the pool
+        (the shared-prefix gather width, max over attention layers —
+        layers run sequentially, so one gather is live at a time).
+        0 for the in-place ``kernel="pallas"`` prefill kernel."""
+        out = 0
+        for c in self._attn_caches():
+            if isinstance(c, attention.PagedAttnCache):
+                out = max(out, attention.prefill_transient_kv_bytes(
+                    c, 1, n_ctx_blocks, self.kernel))
         return out
 
     @property
@@ -612,6 +655,9 @@ class SlotScheduler:
                 self._state, jnp.int32(slot), jnp.asarray(row), req.rng,
                 jnp.int32(limit), table_row, jnp.int32(pb), samp)
         else:
+            self.stats.admit_transient_kv_bytes = max(
+                self.stats.admit_transient_kv_bytes,
+                self._admit_transient_kv_bytes(h))
             self._state = self._admit_suffix_jit(
                 params, self._state, jnp.int32(slot),
                 req.prompt[None, h * bsz:], jnp.asarray(row), req.rng,
@@ -822,6 +868,8 @@ class SlotScheduler:
                 "step(params=) takes model weights; per-request "
                 "SamplingParams belong on submit(..., params=...)")
         self.stats.transient_kv_bytes = self.transient_kv_bytes
+        if not self.stats.kernel_mode and self.kernel_plan:
+            self.stats.kernel_mode = self.kernel_plan.mode
         # ---- admit queued requests into free slots -------------------
         out: list[Completion] = []
         for slot in range(self.n_slots):

@@ -1,18 +1,26 @@
-"""Page-aware decode kernel: parity grid across the three KV layouts.
+"""Page-aware kernel family: parity grids across the KV layouts.
 
-Two levels:
+Three levels:
 
-* kernel-level — ``kernels.paged_attn.paged_decode_attention`` (run
-  through the real ``resolve_kv_layout`` dispatch) against the gathered
-  fallback on raw pools: GQA / MLA-MQA shapes, sliding window, softcap,
-  ragged block tables with -1 holes, ``cache_limit`` edges, and the
-  null-page no-leak guarantee (bitwise: pool garbage cannot change the
-  output);
+* kernel-level decode — ``kernels.paged_attn.paged_decode_attention``
+  (run through the real ``resolve_kv_layout`` dispatch) against the
+  gathered fallback on raw pools: GQA / MLA-MQA shapes, sliding window,
+  softcap, ragged block tables with -1 holes, ``cache_limit`` edges,
+  and the null-page no-leak guarantee (bitwise: pool garbage cannot
+  change the output);
+* kernel-level prefill — ``paged_prefill_attention`` (the in-place
+  suffix-prefill kernel) *bitwise* against the gathered plain-paged
+  path across GQA/MLA x window x softcap x prefix-hit widths, plus the
+  (8, 128) tile-padding parity cases (block_size 4, head dim 96: the
+  padded launch compiled mode would run on TPU matches the unpadded
+  output bitwise) and the ``plan_exec`` execution-planning contract;
 * scheduler-level — decode TOKENS byte-identical across
   dense / gathered-paged / in-place-pallas pools under admission and
   eviction churn (the acceptance criterion), including sliding-window
-  and MLA stacks, prefix-shared pages, and mixed SamplingParams with
-  the zero-retrace invariant (``n_advance_traces == 1``).
+  and MLA stacks, prefix-shared pages, partial-hit suffix-prefill
+  admissions (with ``admit_transient_kv_bytes`` dropping to 0 in
+  place), and mixed SamplingParams with the zero-retrace invariant
+  (``n_advance_traces == 1``).
 
 Nature of the token-level contract: the online-softmax kernel and the
 plain-softmax fallback are different f32 arithmetic, so *logits* agree
@@ -30,6 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.masks import SeqMeta
+from repro.kernels.paged_attn import (paged_decode_attention,
+                                      paged_prefill_attention, plan_exec)
 from repro.models import attention as A
 from repro.models.config import ModelConfig
 from repro.models.model import BlockDiffLM
@@ -152,7 +163,8 @@ def test_cache_limit_edges_match_reference():
 
 def test_transient_kv_bytes_accounting():
     """The layout abstraction's copy accounting: gather width for the
-    ref fallback, dense concat width for dense rows, 0 in place."""
+    ref fallback, dense concat width for dense rows, 0 in place —
+    decode (per-tick) and prefill (per-admission) both."""
     cache, *_ = _pool(jax.random.PRNGKey(3))
     per_tok = 2 * (32 + 32) * 4 + 4          # Hkv*(Dk+Dv)*itemsize + pos
     assert A.transient_kv_bytes(cache, 3, 5, "ref") == 3 * 5 * BSZ * per_tok
@@ -160,8 +172,183 @@ def test_transient_kv_bytes_accounting():
     dense = A.make_attn_cache(3, MAX_LEN, 2, 32, 32, jnp.float32)
     assert A.transient_kv_bytes(dense, 3, 5, "ref") \
         == 3 * MAX_LEN * per_tok
+    # admission-time suffix-prefill gather: hit-prefix width, 0 in place
+    assert A.prefill_transient_kv_bytes(cache, 1, 4, "ref") \
+        == 4 * BSZ * per_tok
+    assert A.prefill_transient_kv_bytes(cache, 1, 4, "pallas") == 0
+    assert A.prefill_transient_kv_bytes(dense, 1, 4, "ref") == 0
     with pytest.raises(ValueError, match="kernel"):
         A.resolve_kv_layout(cache, "cuda")
+
+
+# ---------------------------------------------------------------------------
+# kernel-level suffix-prefill parity (bitwise) + tile padding + planning
+# ---------------------------------------------------------------------------
+
+
+def _prefill_pool(key, *, Kp, Ts, Hkv, Dk, Dv, B=2, bsz=BSZ):
+    """A pool whose first B*Kp pages hold each row's committed prefix
+    (sequential absolute positions) + a Ts-block suffix to prefill."""
+    P = B * max(Kp, 1) + 2
+    ks = jax.random.split(key, 5)
+    pos = np.full((P, bsz), -1, np.int32)
+    table = np.zeros((B, Kp), np.int32)
+    pg = 1
+    for b in range(B):
+        for j in range(Kp):
+            table[b, j] = pg
+            pos[pg] = j * bsz + np.arange(bsz)
+            pg += 1
+    cache = A.PagedAttnCache(
+        k=jax.random.normal(ks[0], (P, bsz, Hkv, Dk), jnp.float32),
+        v=jax.random.normal(ks[1], (P, bsz, Hkv, Dv), jnp.float32),
+        pos=jnp.asarray(pos))
+    T = Ts * bsz
+    positions = np.broadcast_to(Kp * bsz + np.arange(T), (B, T))
+    q = jax.random.normal(ks[2], (B, T, 4 * Hkv, Dk), jnp.float32)
+    k_self = jax.random.normal(ks[3], (B, T, Hkv, Dk), jnp.float32)
+    v_self = jax.random.normal(ks[4], (B, T, Hkv, Dv), jnp.float32)
+    meta = SeqMeta(copy=jnp.zeros((B, T), jnp.int32),
+                   block=jnp.asarray(positions // bsz, jnp.int32),
+                   step=jnp.zeros((B, T), jnp.int32),
+                   pos=jnp.asarray(positions, jnp.int32),
+                   valid=jnp.ones((B, T), bool))
+    return cache, jnp.asarray(table), q, k_self, v_self, meta
+
+
+def _prefill_attend(cache, table, q, k_self, v_self, meta, kernel, *,
+                    bsz=BSZ, **kw):
+    return A.resolve_kv_layout(cache, kernel).prefill_attend(
+        q, k_self, v_self, meta, cache, context_table=table,
+        block_size=bsz, impl="chunked", **kw)
+
+
+@pytest.mark.parametrize("shape", ["gqa", "mla"])
+@pytest.mark.parametrize("window,softcap", [(None, None), (12, None),
+                                            (None, 5.0)])
+@pytest.mark.parametrize("Kp", [0, 1, 3])
+def test_prefill_kernel_bitwise_vs_gathered(shape, window, softcap, Kp):
+    """The tentpole contract: the in-place suffix-prefill kernel is
+    *bitwise* equal to the gathered plain-paged path (and hence to a
+    full prefill — see core.decoding.prefill_suffix) across GQA and the
+    MLA latent-MQA form (Hkv=1, Dk != Dv), sliding window, softcap, and
+    prefix-hit widths from zero (pure-suffix) to several pages."""
+    dims = dict(Hkv=2, Dk=32, Dv=32) if shape == "gqa" \
+        else dict(Hkv=1, Dk=40, Dv=32)
+    cache, table, q, k_self, v_self, meta = _prefill_pool(
+        jax.random.PRNGKey(4), Kp=Kp, Ts=2, **dims)
+    kw = dict(scale=dims["Dk"] ** -0.5, softcap=softcap, window=window)
+    o_ref = _prefill_attend(cache, table, q, k_self, v_self, meta,
+                            "ref", **kw)
+    o_pal = _prefill_attend(cache, table, q, k_self, v_self, meta,
+                            "pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(o_pal), np.asarray(o_ref))
+
+
+def test_prefill_kernel_ignores_stale_pool_rows():
+    """Bitwise guarantee: pool pages outside the context table (and the
+    null page) cannot change the prefill output — the kernel streams
+    only table-mapped pages and masks pos=-1 rows."""
+    cache, table, q, k_self, v_self, meta = _prefill_pool(
+        jax.random.PRNGKey(5), Kp=2, Ts=1, Hkv=2, Dk=32, Dv=32)
+    kw = dict(scale=32 ** -0.5, softcap=None, window=None)
+    base = _prefill_attend(cache, table, q, k_self, v_self, meta,
+                           "pallas", **kw)
+    mapped = {int(p) for p in np.asarray(table).ravel()}
+    unmapped = [p for p in range(cache.k.shape[0]) if p not in mapped]
+    poison = cache._replace(
+        k=cache.k.at[jnp.asarray(unmapped)].set(1e9),
+        v=cache.v.at[jnp.asarray(unmapped)].set(-1e9))
+    got = _prefill_attend(poison, table, q, k_self, v_self, meta,
+                          "pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def _subtile_decode_pool(key, *, bsz=4, Dk=96, Dv=96, Hkv=2, B=2, K=3):
+    P = B * K + 1
+    ks = jax.random.split(key, 5)
+    kp = jax.random.normal(ks[0], (P, bsz, Hkv, Dk), jnp.float32)
+    vp = jax.random.normal(ks[1], (P, bsz, Hkv, Dv), jnp.float32)
+    pp = jnp.asarray(np.arange(P * bsz).reshape(P, bsz) % (K * bsz),
+                     jnp.int32)
+    table = jnp.asarray(np.arange(1, B * K + 1).reshape(B, K), jnp.int32)
+    k_self = jax.random.normal(ks[2], (B, bsz, Hkv, Dk), jnp.float32)
+    v_self = jax.random.normal(ks[3], (B, bsz, Hkv, Dv), jnp.float32)
+    positions = jnp.asarray(
+        np.broadcast_to(K * bsz + np.arange(bsz), (B, bsz)), jnp.int32)
+    limit = jnp.full((B,), K * bsz, jnp.int32)
+    q = jax.random.normal(ks[4], (B, bsz, 2 * Hkv, Dk), jnp.float32)
+    return q, kp, vp, pp, table, k_self, v_self, positions, limit
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_tile_padding_bitwise_decode(window):
+    """block_size 4 / head dim 96 (both below the (8, 128) f32 tile):
+    the zero-padded launch — the exact operands compiled mode runs on
+    TPU — matches the unpadded output bitwise.  Padded self rows carry
+    pos=-1 and padded head dims contribute +0.0 terms, so padding is
+    arithmetic-exact, not approximate."""
+    q, kp, vp, pp, table, ksf, vsf, pos, lim = _subtile_decode_pool(
+        jax.random.PRNGKey(6))
+    kw = dict(scale=96 ** -0.5, softcap=None, window=window)
+    plain = paged_decode_attention(q, kp, vp, pp, table, ksf, vsf, pos,
+                                   lim, interpret=True, pad=False, **kw)
+    padded = paged_decode_attention(q, kp, vp, pp, table, ksf, vsf, pos,
+                                    lim, interpret=True, pad=True, **kw)
+    np.testing.assert_array_equal(np.asarray(padded), np.asarray(plain))
+
+
+@pytest.mark.parametrize("softcap", [None, 5.0])
+def test_tile_padding_bitwise_prefill(softcap):
+    """Prefill counterpart of the padding parity: sub-tile pages
+    (block_size 4) and head dim 96, padded vs unpadded bitwise."""
+    cache, table, q, k_self, v_self, meta = _prefill_pool(
+        jax.random.PRNGKey(7), Kp=3, Ts=2, Hkv=2, Dk=96, Dv=96, bsz=4)
+    kw = dict(scale=96 ** -0.5, softcap=softcap, window=None)
+    plain = paged_prefill_attention(
+        q, cache.k, cache.v, cache.pos, table, k_self, v_self, meta.pos,
+        interpret=True, pad=False, **kw)
+    padded = paged_prefill_attention(
+        q, cache.k, cache.v, cache.pos, table, k_self, v_self, meta.pos,
+        interpret=True, pad=True, **kw)
+    np.testing.assert_array_equal(np.asarray(padded), np.asarray(plain))
+
+
+def test_plan_exec_contract():
+    """Execution planning: tile-aligned shapes compile on TPU, sub-tile
+    shapes compile via zero-padding (unless padding is disabled, which
+    falls back to interpret), and non-TPU backends always interpret."""
+    on_tpu = jax.default_backend() == "tpu"
+    # tile-aligned page shape: compiled wherever a TPU exists
+    plan = plan_exec(8, 128, 128, interpret=False)
+    assert plan.mode == "compiled" and not plan.padded
+    assert "tile-aligned" in plan.reason
+    # sub-tile: compiled only by padding up to the (8, 128) tile
+    plan = plan_exec(4, 96, 96, interpret=False)
+    assert plan.mode == "compiled" and plan.padded
+    assert "zero-padded" in plan.reason
+    # padding disabled -> the old interpret fallback, with the reason
+    plan = plan_exec(4, 96, 96, interpret=False, pad=False)
+    assert plan.mode == "interpret" and not plan.padded
+    assert "padding disabled" in plan.reason
+    # backend-resolved default (this CI host: no TPU -> interpret)
+    plan = plan_exec(4, 96, 96)
+    assert plan.interpret == (not on_tpu)
+    if not on_tpu:
+        assert "backend=" in plan.reason and not plan.padded
+    # forced interpret always wins
+    assert plan_exec(8, 128, 128, interpret=True).mode == "interpret"
+
+
+def test_kernel_exec_plan_surface():
+    """The queryable mode surface: a KernelPlan for pallas on paged
+    caches, None wherever no Pallas kernel is ever launched."""
+    cache, *_ = _pool(jax.random.PRNGKey(3))
+    plan = A.kernel_exec_plan(cache, "pallas")
+    assert plan is not None and plan.mode in ("compiled", "interpret")
+    assert A.kernel_exec_plan(cache, "ref") is None
+    dense = A.make_attn_cache(3, MAX_LEN, 2, 32, 32, jnp.float32)
+    assert A.kernel_exec_plan(dense, "pallas") is None
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +447,48 @@ def test_pallas_prefix_shared_pages_parity():
     assert outs["pallas"][1].transient_kv_bytes == 0
 
 
+def test_partial_hit_suffix_prefill_parity_and_admit_stats():
+    """Partial prefix hits take the suffix-prefill path: a prompt whose
+    first blocks are registered but whose tail diverges pays a suffix
+    prefill against the hit pages.  Tokens must be byte-identical
+    between the gathered admission (kernel="ref") and the in-place
+    prefill kernel (kernel="pallas") — and the admission-gather stat
+    must be the hit width for ref, exactly 0 in place."""
+    model = BlockDiffLM(ModelConfig(name="t", **_BASE))
+    params = model.init(jax.random.PRNGKey(0))
+    base = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(2), (2, 16), 4, 100))
+    ext = np.concatenate([base, (base[:, :BSZ] + 1) % 100], axis=1)
+    keys = jax.random.split(jax.random.PRNGKey(23), 8)
+    outs = {}
+    for kernel in ["ref", "pallas"]:
+        sched = SlotScheduler(model, n_slots=4, max_len=MAX_LEN, s_max=3,
+                              mode="dynamic", tau=0.8, temperature=1.0,
+                              eos_id=1, cache="paged", n_pages=41,
+                              prefix_cache=True, kernel=kernel)
+        for i in range(8):
+            p = i // 4
+            if i % 2:   # odd members: 2 hit blocks + 1 divergent block
+                sched.submit(ext[p], 3, keys[i], max_new_blocks=2)
+            else:       # even members register / fully hit the base
+                sched.submit(base[p], 2, keys[i], max_new_blocks=2)
+        outs[kernel] = ({c.uid: c for c in sched.run(params)},
+                        sched.stats, sched.kernel_plan)
+    _assert_same_tokens(outs["ref"][0], outs["pallas"][0])
+    s_ref, s_pal = outs["ref"][1], outs["pallas"][1]
+    assert s_ref.prefix_hit_blocks == s_pal.prefix_hit_blocks > 0
+    # admission gather = 2 hit blocks x token bytes for one B=1 row
+    per_tok = 2 * (16 + 16) * 4 + 4
+    assert s_ref.admit_transient_kv_bytes == 2 * BSZ * per_tok
+    assert s_pal.admit_transient_kv_bytes == 0
+    # the queryable execution-mode surface
+    assert s_ref.kernel_mode == "" and outs["ref"][2] is None
+    plan = outs["pallas"][2]
+    assert plan is not None and s_pal.kernel_mode == plan.mode
+    if jax.default_backend() != "tpu":
+        assert plan.mode == "interpret" and "backend=" in plan.reason
+
+
 def test_pallas_zero_retrace_mixed_params():
     """Mixed SamplingParams on one pallas pool: a single advance trace
     (the kernel choice is a pool static, request params stay traced
@@ -309,6 +538,9 @@ def test_engine_surfaces_transient_kv_bytes():
         np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
     assert stats["continuous"].transient_kv_bytes == 0
     assert stats["static"].transient_kv_bytes == 0   # no pool built
+    assert stats["continuous"].admit_transient_kv_bytes == 0
+    assert stats["continuous"].kernel_mode in ("compiled", "interpret")
+    assert stats["static"].kernel_mode == ""         # no pool built
 
 
 def test_kernel_config_validation():
