@@ -1,0 +1,64 @@
+"""dirlint smoke: time the full contract-checking pass.
+
+The analyzer is part of CI's lint gate, so its own latency is a
+contract: the full pass (trace hygiene + donation safety + kernel
+capture over the whole plan matrix) must stay interactive.  Emits one
+CSV row per pass plus the total, and raises if the full run exceeds
+the budget.
+"""
+
+from __future__ import annotations
+
+import time
+
+_BUDGET_S = 30.0
+
+
+def run(quick: bool = True, smoke: bool = False):
+    from repro.analysis import run_all
+    from repro.analysis.astutils import Project
+    from repro.analysis import donation, kernel_contracts, trace_lint
+
+    yield "pass,findings,suppressed,seconds"
+
+    project = Project.__new__(Project)          # built below, timed
+    t0 = time.perf_counter()
+    project.__init__(_src_root())
+    t_parse = time.perf_counter() - t0
+    yield f"parse,{len(project.modules)},0,{t_parse:.2f}"
+
+    rows = []
+    for name, fn in (("trace_lint", trace_lint.run),
+                     ("donation", donation.run)):
+        t0 = time.perf_counter()
+        found = fn(project)
+        rows.append((name, found, time.perf_counter() - t0))
+    t0 = time.perf_counter()
+    rows.append(("kernel_contracts", kernel_contracts.run(project),
+                 time.perf_counter() - t0))
+    for name, found, dt in rows:
+        yield f"{name},{len(found)},0,{dt:.2f}"
+
+    t0 = time.perf_counter()
+    findings = run_all()
+    t_all = time.perf_counter() - t0
+    loud = [f for f in findings if not f.suppressed]
+    yield (f"run_all,{len(loud)},"
+           f"{len(findings) - len(loud)},{t_all:.2f}")
+
+    total = t_parse + sum(dt for _, _, dt in rows) + t_all
+    if total > _BUDGET_S:
+        raise RuntimeError(
+            f"dirlint pass took {total:.1f}s > {_BUDGET_S:.0f}s budget")
+    if loud:
+        raise RuntimeError(
+            f"dirlint found {len(loud)} unsuppressed finding(s): "
+            + "; ".join(f.format() for f in loud[:5]))
+    yield f"total,,,{total:.2f}"
+
+
+def _src_root():
+    # repro is a namespace package (no __file__); anchor on a real module
+    import repro.analysis as a
+    from pathlib import Path
+    return Path(a.__file__).resolve().parents[1]

@@ -39,12 +39,13 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (fig6_breakdown, fig7_sizes, fig8_tau_sweep,
-                   kernel_bench, paged_attn_bench, serve_bench,
-                   table1_eval)
+    from . import (analysis_bench, fig6_breakdown, fig7_sizes,
+                   fig8_tau_sweep, kernel_bench, paged_attn_bench,
+                   serve_bench, table1_eval)
     from .common import validate_bench_json
 
     benches = {
+        "analysis_bench": analysis_bench.run,
         "kernel_bench": kernel_bench.run,
         "paged_attn_bench": paged_attn_bench.run,
         "fig7_sizes": fig7_sizes.run,

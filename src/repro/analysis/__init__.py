@@ -1,0 +1,84 @@
+"""dirlint — contract-checking static analysis for the DiRL repro.
+
+Three cooperating, CPU-runnable passes guard the contracts the test
+suite can't state directly:
+
+1. **Trace hygiene** (``trace_lint``): walks everything reachable from
+   the repo's ``jax.jit``/``TraceGuard`` sites (serving scheduler &
+   engine ticks, RL/SFT train steps, the launch loop) and flags Python
+   control flow on traced values (``trace-branch``), host pulls of
+   tracers — ``.item()``/``float()``/``np.asarray`` —
+   (``trace-host-pull``), and ``jax.block_until_ready`` /
+   ``jax.device_get`` inside per-tick hot paths (``hot-sync``).
+2. **Donation safety** (``donation``): tracks every jit object created
+   with ``donate_argnums`` — including ``self._x`` handles declared in
+   one method and called from another — and flags reads of a donated
+   buffer after the call (``post-donation-read``), loop wrap-arounds
+   included.
+3. **Pallas kernel contracts** (``kernel_contracts``): monkeypatch-
+   captures ``pl.pallas_call`` launches from the real kernels, then
+   bounds-checks every BlockSpec index map over the full grid with the
+   real block tables (``kernel-oob-index``), checks (8, 128) scratch
+   tiling whenever the plan promises tile alignment
+   (``kernel-scratch-tile``), exercises the whole
+   ``plan_exec`` (interpret x pad) matrix plus an abstract eval of each
+   kernel body (``kernel-plan-matrix``), and cross-references
+   ``tests/test_paged_attn.py`` for masking-contract coverage
+   (``kernel-parity-coverage``).
+
+Deliberate exceptions carry a pragma on the flagged line or the line
+above: ``# dirlint: ok(rule-id)`` (comma-separate several ids).  The
+CLI is ``python -m repro.analysis``; ``--strict`` exits non-zero on any
+unsuppressed finding and is wired into CI ahead of the test jobs.
+
+``guards.TraceGuard`` is the runtime companion: a jitted callable that
+counts its own compilations (the zero-retrace witness the scheduler
+and trainers expose through their stats) and can optionally run under
+``jax.transfer_guard``.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from . import donation, kernel_contracts, trace_lint
+from .astutils import Project
+from .guards import TraceGuard
+from .rules import RULES, Finding, apply_pragmas, scan_pragmas
+
+__all__ = ["Finding", "RULES", "TraceGuard", "Project", "run_all"]
+
+_SRC_ROOT = Path(__file__).resolve().parents[1]
+
+
+def run_all(root=None, tests_path=None, *,
+            kernel_check: bool = True) -> list[Finding]:
+    """Run every pass; return findings with pragmas applied.
+
+    ``root`` is the package source root (defaults to the installed
+    ``src/repro``); ``tests_path`` overrides the parity-test file;
+    ``kernel_check=False`` skips the (slower) kernel capture pass.
+    """
+    project = Project(Path(root) if root else _SRC_ROOT)
+    findings = trace_lint.run(project)
+    findings += donation.run(project)
+    if kernel_check:
+        findings += kernel_contracts.run(project, tests_path)
+
+    pragmas: dict[str, dict[int, set[str]]] = {}
+    for f in findings:
+        if f.path not in pragmas:
+            try:
+                src = Path(f.path).read_text()
+            except OSError:
+                src = ""
+            pragmas[f.path] = scan_pragmas(src)
+    findings = apply_pragmas(findings, pragmas)
+    # passes can rediscover one defect through several call paths
+    seen, unique = set(), []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+    return unique

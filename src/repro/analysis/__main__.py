@@ -1,0 +1,63 @@
+"""dirlint CLI: ``python -m repro.analysis [--strict] [...]``.
+
+Exit status: 0 when clean (or only suppressed findings), 1 under
+``--strict`` when any unsuppressed finding remains, 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import RULES, run_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="dirlint: trace hygiene, donation safety, and "
+                    "Pallas kernel contract checks")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any unsuppressed finding remains")
+    ap.add_argument("--root", default=None,
+                    help="package source root (default: installed repro)")
+    ap.add_argument("--tests", default=None,
+                    help="parity test file for coverage checks")
+    ap.add_argument("--no-kernel-check", action="store_true",
+                    help="skip the Pallas kernel capture pass")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print every rule id and contract, then exit")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON lines")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also show pragma-suppressed findings")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(rid) for rid in RULES)
+        for rid, cls in sorted(RULES.items()):
+            print(f"{rid.ljust(width)}  {cls.doc}")
+        return 0
+
+    findings = run_all(root=args.root, tests_path=args.tests,
+                       kernel_check=not args.no_kernel_check)
+    active = [f for f in findings if not f.suppressed]
+    shown = findings if args.verbose else active
+
+    for f in shown:
+        if args.json:
+            print(json.dumps({"rule": f.rule, "path": f.path,
+                              "line": f.line, "message": f.message,
+                              "suppressed": f.suppressed}))
+        else:
+            print(f.format())
+    n_sup = sum(1 for f in findings if f.suppressed)
+    if not args.json:
+        print(f"dirlint: {len(active)} finding(s), "
+              f"{n_sup} suppressed", file=sys.stderr)
+    return 1 if (args.strict and active) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

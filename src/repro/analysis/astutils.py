@@ -1,0 +1,247 @@
+"""Shared AST project model for the dirlint passes.
+
+Loads every module under ``src/repro`` into a light call-resolution
+index: dotted module names, import aliases, all (possibly nested)
+function definitions with qualified names, and enough name resolution
+to follow the repo's own call edges — plain calls, ``self.method``,
+``module.function`` through import aliases, ``functools.partial``
+targets, and factory functions that return a nested def (the
+``make_train_step`` pattern).  External calls (jnp ops, stdlib) resolve
+to ``None`` and are treated as opaque.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+__all__ = ["FunctionInfo", "Module", "Project", "attr_path"]
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str                  # dotted scope path within the module
+    module: "Module"
+    node: ast.AST                  # FunctionDef | AsyncFunctionDef
+    cls_name: str | None           # directly-enclosing class, if any
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    @property
+    def params(self) -> list[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if names and names[0] in ("self", "cls"):
+            names = names[1:]
+        return names
+
+    @property
+    def all_params(self) -> list[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+    def __repr__(self):
+        return f"<fn {self.module.name}:{self.qualname}>"
+
+
+class _Collector(ast.NodeVisitor):
+    def __init__(self, module: "Module"):
+        self.module = module
+        self.scope: list[str] = []
+        self.cls: list[str | None] = [None]
+
+    def _qual(self, name: str) -> str:
+        return ".".join(self.scope + [name])
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.scope.append(node.name)
+        self.cls.append(node.name)
+        self.generic_visit(node)
+        self.cls.pop()
+        self.scope.pop()
+
+    def _visit_fn(self, node):
+        qual = self._qual(node.name)
+        info = FunctionInfo(qual, self.module, node, self.cls[-1])
+        self.module.functions[qual] = info
+        scope_key = ".".join(self.scope)
+        self.module.scoped.setdefault(scope_key, {})[node.name] = info
+        self.scope.append(node.name)
+        self.cls.append(None)
+        self.generic_visit(node)
+        self.cls.pop()
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+
+class Module:
+    def __init__(self, name: str, path: Path, source: str):
+        self.name = name                    # e.g. "repro.serving.scheduler"
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        # import alias -> absolute dotted module ("jnp" -> "jax.numpy")
+        self.import_aliases: dict[str, str] = {}
+        # from-import local name -> (absolute module, attr)
+        self.from_imports: dict[str, tuple[str, str]] = {}
+        self.functions: dict[str, FunctionInfo] = {}
+        # scope qualname ("" = module level) -> {name: FunctionInfo}
+        self.scoped: dict[str, dict[str, FunctionInfo]] = {}
+        # field names declared static via dataclasses.field(
+        # metadata={"static": True}) — the jax.tree_util
+        # register_dataclass convention: loads of these attributes are
+        # host values even on traced pytrees
+        self.static_fields: set[str] = _collect_static_fields(self.tree)
+        self._collect_imports()
+        _Collector(self).visit(self.tree)
+
+    def _collect_imports(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_aliases[a.asname or
+                                        a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:                     # relative import
+                    parts = self.name.split(".")[:-node.level]
+                    base = ".".join(parts + ([node.module]
+                                             if node.module else []))
+                for a in node.names:
+                    self.from_imports[a.asname or a.name] = (base, a.name)
+
+
+class Project:
+    """All modules under one package root, plus cross-module resolution."""
+
+    def __init__(self, root: Path, pkg: str = "repro"):
+        self.root = Path(root)
+        self.pkg = pkg
+        self.modules: dict[str, Module] = {}
+        for path in sorted(self.root.rglob("*.py")):
+            rel = path.relative_to(self.root).with_suffix("")
+            parts = list(rel.parts)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            name = ".".join([pkg] + parts)
+            try:
+                self.modules[name] = Module(name, path,
+                                            path.read_text())
+            except SyntaxError:
+                pass
+        self.static_fields: set[str] = set()
+        for m in self.modules.values():
+            self.static_fields |= m.static_fields
+
+    # ------------------------------------------------------- resolution
+    def module_of_alias(self, module: Module, name: str) -> Module | None:
+        """A local name that denotes a repro module, if any."""
+        tgt = module.import_aliases.get(name)
+        if tgt and tgt in self.modules:
+            return self.modules[tgt]
+        fi = module.from_imports.get(name)
+        if fi:
+            dotted = f"{fi[0]}.{fi[1]}" if fi[0] else fi[1]
+            if dotted in self.modules:
+                return self.modules[dotted]
+        return None
+
+    def resolve_name(self, module: Module, scope: str,
+                     name: str) -> FunctionInfo | None:
+        """A bare name in ``scope`` (function qualname or "")."""
+        parts = scope.split(".") if scope else []
+        while True:
+            key = ".".join(parts)
+            hit = module.scoped.get(key, {}).get(name)
+            if hit is not None:
+                return hit
+            if not parts:
+                break
+            parts.pop()
+        fi = module.from_imports.get(name)
+        if fi and fi[0] in self.modules:
+            return self.modules[fi[0]].functions.get(fi[1])
+        return None
+
+    def resolve_callable(self, ctx_module: Module, ctx_scope: str,
+                         ctx_cls: str | None,
+                         node: ast.expr) -> FunctionInfo | None:
+        """Resolve a call's func expression to a repo function, else
+        None.  ``ctx_scope`` is the enclosing function's qualname ("" at
+        module level); ``ctx_cls`` its class for ``self.X`` calls."""
+        if isinstance(node, ast.Name):
+            return self.resolve_name(ctx_module, ctx_scope, node.id)
+        if isinstance(node, ast.Attribute):
+            v = node.value
+            if isinstance(v, ast.Name):
+                if v.id in ("self", "cls") and ctx_cls:
+                    return ctx_module.functions.get(
+                        f"{ctx_cls}.{node.attr}")
+                mod = self.module_of_alias(ctx_module, v.id)
+                if mod is not None:
+                    return mod.functions.get(node.attr)
+            # dotted module alias: repro.core.decoding.advance_block
+            path = attr_path(node.value)
+            if path:
+                dotted = path if path.startswith(self.pkg + ".") else None
+                if dotted and dotted in self.modules:
+                    return self.modules[dotted].functions.get(node.attr)
+        return None
+
+    def resolve_factory_return(self, fi: FunctionInfo) \
+            -> FunctionInfo | None:
+        """``def make_x(...): def x(...): ...; return x`` -> info(x)."""
+        for stmt in ast.walk(fi.node):
+            if isinstance(stmt, ast.Return) and \
+                    isinstance(stmt.value, ast.Name):
+                inner = fi.module.scoped.get(fi.qualname, {}) \
+                    .get(stmt.value.id)
+                if inner is not None:
+                    return inner
+        return None
+
+
+def _collect_static_fields(tree) -> set[str]:
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                    and isinstance(stmt.value, ast.Call)):
+                continue
+            f = stmt.value.func
+            is_field = (isinstance(f, ast.Name) and f.id == "field") or \
+                (isinstance(f, ast.Attribute) and f.attr == "field")
+            if not is_field:
+                continue
+            for kw in stmt.value.keywords:
+                if kw.arg != "metadata" or \
+                        not isinstance(kw.value, ast.Dict):
+                    continue
+                for k, v in zip(kw.value.keys, kw.value.values):
+                    if isinstance(k, ast.Constant) and \
+                            k.value == "static" and \
+                            isinstance(v, ast.Constant) and v.value:
+                        out.add(stmt.target.id)
+    return out
+
+
+def attr_path(node: ast.expr) -> str | None:
+    """Dotted path of a Name/Attribute chain ("self._state.caches"),
+    None for anything else (calls, subscripts...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None

@@ -1,0 +1,207 @@
+"""Pass 2 — donation safety: no reads of a donated buffer after the call.
+
+``jax.jit(fn, donate_argnums=...)`` marks argument buffers as dead on
+entry: the backend may alias them into the outputs, and any later host
+read of the old array raises ``RuntimeError: Array has been deleted``
+(or silently reads garbage on backends without the check).  This pass
+tracks every jit/TraceGuard object created with ``donate_argnums`` —
+local variables *and* ``self._x`` attributes declared in one method and
+called in another — and, at each call site, flags a ``Load`` of a
+donated argument expression after the call in the enclosing scope,
+unless it was rebound first (the canonical
+``self._state = self._advance(params, self._state)`` shape rebinds in
+the very statement, which is safe).
+
+Paths are tracked as dotted Name/Attribute chains ("params",
+"self._state").  A read of the donated path *or any extension of it*
+("self._state.caches") counts; a store to the path *or any prefix*
+clears it.  Calls inside a loop wrap around: if the donated path is not
+rebound by the end of the loop body, the next iteration's call re-reads
+the dead buffer and is flagged at the call line.  ``jfn.lower(...)``
+only traces — it is not a call of the donated function and never flags
+(the ``launch/dryrun.py`` pattern).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutils import Module, Project, attr_path
+from .rules import Finding
+
+__all__ = ["run"]
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def _is_jit_ctor(module: Module, call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "jit" and \
+            isinstance(f.value, ast.Name) and \
+            module.import_aliases.get(f.value.id) == "jax":
+        return True
+    if isinstance(f, ast.Name) and f.id == "TraceGuard":
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "TraceGuard":
+        return True
+    return False
+
+
+def _donate_argnums(call: ast.Call) -> tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+    return ()
+
+
+def _collect_decls(module: Module) -> dict[str, tuple[int, ...]]:
+    """Every ``<path> = jax.jit(..., donate_argnums=...)`` in the
+    module, path as written ("jfn", "self._advance")."""
+    decls: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.Assign) and
+                isinstance(node.value, ast.Call) and
+                _is_jit_ctor(module, node.value)):
+            continue
+        nums = _donate_argnums(node.value)
+        if not nums:
+            continue
+        for tgt in node.targets:
+            path = attr_path(tgt)
+            if path:
+                decls[path] = nums
+    return decls
+
+
+def _stores_in(stmt: ast.stmt, path: str) -> bool:
+    """Does this statement bind ``path`` or a prefix of it?"""
+    for node in ast.walk(stmt):
+        if isinstance(node, (ast.Name, ast.Attribute)) and \
+                isinstance(getattr(node, "ctx", None), ast.Store):
+            p = attr_path(node)
+            if p and (p == path or path.startswith(p + ".")):
+                return True
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            p = attr_path(node.target)
+            if p and (p == path or path.startswith(p + ".")):
+                return True
+    return False
+
+
+def _reads_in(node: ast.AST, path: str) -> int | None:
+    """Line of the first Load of ``path`` (or an extension of it) in
+    this subtree."""
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)) and \
+                isinstance(getattr(n, "ctx", None), ast.Load):
+            p = attr_path(n)
+            if p and (p == path or p.startswith(path + ".")):
+                return n.lineno
+    return None
+
+
+class _ScopeCheck:
+    """Check one function scope for post-donation reads."""
+
+    def __init__(self, module: Module, decls: dict, findings: list,
+                 scope_name: str):
+        self.module = module
+        self.decls = decls
+        self.findings = findings
+        self.scope_name = scope_name
+
+    def check(self, body: list):
+        self._walk_block(body, after=[])
+
+    # ``after``: list of statement blocks that execute after the current
+    # block finishes (innermost first), used to continue the read scan
+    # past the enclosing statement.
+    def _walk_block(self, body: list, after: list):
+        for i, stmt in enumerate(body):
+            if isinstance(stmt, _DEFS):
+                continue
+            rest = body[i + 1:]
+            for call in self._donating_calls(stmt):
+                self._check_call(stmt, call, rest, after)
+            # recurse into compound statements
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                # loop bodies wrap around: the body itself re-executes
+                self._walk_block(stmt.body,
+                                 [stmt.body, rest] + after)
+                self._walk_block(stmt.orelse, [rest] + after)
+            elif isinstance(stmt, ast.If):
+                self._walk_block(stmt.body, [rest] + after)
+                self._walk_block(stmt.orelse, [rest] + after)
+            elif isinstance(stmt, ast.With):
+                self._walk_block(stmt.body, [rest] + after)
+            elif isinstance(stmt, ast.Try):
+                for blk in (stmt.body, stmt.orelse, stmt.finalbody):
+                    self._walk_block(blk, [rest] + after)
+                for h in stmt.handlers:
+                    self._walk_block(h.body, [rest] + after)
+
+    def _donating_calls(self, stmt: ast.stmt):
+        for node in ast.walk(stmt):
+            if isinstance(node, _DEFS):
+                continue
+            if isinstance(node, ast.Call):
+                p = attr_path(node.func)
+                if p and p in self.decls:
+                    yield node
+
+    def _check_call(self, stmt: ast.stmt, call: ast.Call,
+                    rest: list, after: list):
+        nums = self.decls[attr_path(call.func)]
+        for idx in nums:
+            if idx >= len(call.args):
+                continue
+            path = attr_path(call.args[idx])
+            if path is None:
+                continue                 # literal/temporary: dies here
+            if _stores_in(stmt, path):
+                continue                 # rebound in the call statement
+            # the call statement itself is excluded from `rest`, but a
+            # loop wrap-around block may contain it again — there the
+            # re-call's own argument read is a genuine dead-buffer read
+            line = self._first_read(path, [rest] + after)
+            if line is not None:
+                self.findings.append(Finding(
+                    "post-donation-read", str(self.module.path), line,
+                    f"`{path}` was donated to "
+                    f"`{attr_path(call.func)}` (donate_argnums includes"
+                    f" {idx}) at line {call.lineno} in "
+                    f"{self.scope_name} and is read afterwards — the "
+                    "buffer is deleted; rebind it from the call's "
+                    "output or drop the donation"))
+
+    def _first_read(self, path: str, blocks: list) -> int | None:
+        for block in blocks:
+            for stmt in block:
+                if isinstance(stmt, _DEFS):
+                    continue
+                line = _reads_in(stmt, path)
+                if line is not None:
+                    return line
+                if _stores_in(stmt, path):
+                    return None          # rebound before any read
+        return None
+
+
+def run(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for module in project.modules.values():
+        decls = _collect_decls(module)
+        if not decls:
+            continue
+        for fi in module.functions.values():
+            _ScopeCheck(module, decls, findings,
+                        fi.qualname).check(fi.node.body)
+        _ScopeCheck(module, decls, findings,
+                    "<module>").check(module.tree.body)
+    return findings

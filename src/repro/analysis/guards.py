@@ -1,0 +1,93 @@
+"""TraceGuard — a jitted callable that counts its own compilations.
+
+Generalizes the scheduler's hand-rolled ``n_advance_traces`` counter
+(the zero-retrace contract's witness since the mixed-``SamplingParams``
+pool landed): wrap any function destined for ``jax.jit`` and the guard
+counts how many times jax actually *traces* it — the body increment
+only runs under tracing, so cache hits leave the counter untouched.
+``donate_argnums`` / ``static_argnames`` / ``static_argnums`` pass
+through to ``jax.jit`` unchanged, and ``functools.wraps`` preserves the
+wrapped signature so ``static_argnames`` keeps resolving positionally
+passed arguments.
+
+Optionally the guard enforces a transfer contract at call time:
+``transfer_guard="disallow"`` runs every call under
+``jax.transfer_guard("disallow")``, turning silent host<->device
+copies (implicit ``np.asarray`` pulls, scalar captures) into errors —
+the runtime complement of dirlint's static ``trace-host-pull`` rule.
+
+Usage::
+
+    self._advance = TraceGuard(advance_impl, donate_argnums=(1,),
+                               name="advance")
+    ...
+    self._state = self._advance(params, self._state)
+    assert self._advance.n_traces == 1     # zero-retrace contract
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["TraceGuard"]
+
+
+class TraceGuard:
+    """Wrap ``fn`` in ``jax.jit`` with a compile counter.
+
+    fn              the function to jit
+    donate_argnums  / static_argnums / static_argnames: forwarded to
+                    ``jax.jit``
+    transfer_guard  None (off) or a ``jax.transfer_guard`` level
+                    ("allow" | "log" | "disallow" | ...) applied around
+                    every call
+    name            label for ``stats()`` (defaults to fn.__name__)
+    """
+
+    def __init__(self, fn, *, donate_argnums=(), static_argnums=(),
+                 static_argnames=(), transfer_guard: str | None = None,
+                 name: str | None = None, **jit_kwargs):
+        self.name = name or getattr(fn, "__name__", "jitted")
+        self.transfer_guard = transfer_guard
+        self._n_traces = 0
+
+        @functools.wraps(fn)
+        def counted(*args, **kwargs):
+            # runs only while jax traces (compiles) — cache hits skip it
+            self._n_traces += 1
+            return fn(*args, **kwargs)
+
+        if donate_argnums:
+            jit_kwargs["donate_argnums"] = donate_argnums
+        if static_argnums:
+            jit_kwargs["static_argnums"] = static_argnums
+        if static_argnames:
+            jit_kwargs["static_argnames"] = static_argnames
+        self._jit = jax.jit(counted, **jit_kwargs)
+
+    @property
+    def n_traces(self) -> int:
+        """Compilations so far (1 == the zero-retrace contract holds)."""
+        return self._n_traces
+
+    def reset(self) -> None:
+        """Zero the counter (the compile cache is NOT cleared — a reset
+        guard counts only *new* traces)."""
+        self._n_traces = 0
+
+    def stats(self) -> dict:
+        return {"name": self.name, "n_traces": self._n_traces}
+
+    def __call__(self, *args, **kwargs):
+        if self.transfer_guard is not None:
+            with jax.transfer_guard(self.transfer_guard):
+                return self._jit(*args, **kwargs)
+        return self._jit(*args, **kwargs)
+
+    def lower(self, *args, **kwargs):
+        return self._jit.lower(*args, **kwargs)
+
+    def __repr__(self):
+        return f"TraceGuard({self.name}, n_traces={self._n_traces})"

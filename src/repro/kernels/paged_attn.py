@@ -390,7 +390,8 @@ def _prefill_kernel(table_ref, q_ref, kp_ref, vp_ref, pp_ref,
     pos_blk = jnp.where(is_pfx, pos_pfx, sp_ref[0, 0])
     k_s[pl.ds(j * bsz, bsz), :] = k_blk[:bsz]
     v_s[pl.ds(j * bsz, bsz), :] = v_blk[:bsz]
-    pos_s[pl.ds(j * bsz, bsz), :] = pos_blk[:bsz, None]
+    pos_s[pl.ds(j * bsz, bsz), :] = jnp.broadcast_to(
+        pos_blk[:bsz, None], (bsz, pos_s.shape[-1]))
 
     # --- final kv step: the reference chunk walk over the scratch -----
     @pl.when(j == n_kv - 1)
@@ -566,7 +567,9 @@ def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
         scratch_shapes=[
             pltpu.VMEM((Lk, dkp), k_self.dtype),
             pltpu.VMEM((Lk, dvp), v_self.dtype),
-            pltpu.VMEM((Lk, 1), jnp.int32),
+            # positions replicated across a full lane: a (Lk, 1) buffer
+            # is not (8, 128)-tile addressable in compiled mode
+            pltpu.VMEM((Lk, _LANES), jnp.int32),
         ],
     )
     out = pl.pallas_call(

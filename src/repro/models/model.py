@@ -234,7 +234,8 @@ def _apply_layer(cfg: ModelConfig, spec: LayerSpec, lp, x, ctx: LayerCtx,
     if cfg.sandwich_norm:
         y = rmsnorm(lp["post_ffn_norm"], y, eps=cfg.norm_eps)
     x = x + shard_hint(y, BATCH, None, None)
-    if ffn_bounds:
+    # dict|None truthiness: pytree *structure*, static under jit
+    if ffn_bounds:  # dirlint: ok(trace-branch)
         bounds = {**(bounds or {}), **ffn_bounds}
     return x, new_cache, aux, bounds
 

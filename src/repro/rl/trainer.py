@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.guards import TraceGuard
 from repro.core import decoding
 from repro.core.dipo import dipo_loss
 from repro.core.trajectory import trajectory_logprobs
@@ -74,8 +75,12 @@ class DiPOTrainer:
                 opt_cfg, params, grads, opt_state)
             return params, opt_state, {**metrics, **om, "loss": loss}
 
-        self._step = jax.jit(step_fn, donate_argnums=(0, 1),
-                             static_argnames=("n_groups",))
+        # TraceGuard preserves step_fn's signature (functools.wraps),
+        # so static_argnames still resolves n_groups when it is passed
+        # positionally; n_traces witnesses one compile per n_groups
+        self._step = TraceGuard(step_fn, donate_argnums=(0, 1),
+                                static_argnames=("n_groups",),
+                                name="dipo_step")
         self._ref_logp = jax.jit(functools.partial(
             trajectory_logprobs, model, s_max=s_max,
             scheme=rl_cfg.logprob_scheme))
@@ -122,7 +127,9 @@ class DiPOTrainer:
                 self._ref_logp(self.ref_params, roll))
         self.params, self.opt_state, metrics = self._step(
             self.params, self.opt_state, roll, ref_logp, P)
-        jax.block_until_ready(metrics["loss"])
+        # deliberate: t_train must measure the real step, and metrics
+        # are pulled to host right below anyway
+        jax.block_until_ready(metrics["loss"])  # dirlint: ok(hot-sync)
         t_train = time.perf_counter() - t0
 
         # ---- in-place server update ------------------------------------
@@ -141,6 +148,7 @@ class DiPOTrainer:
         self.timings.append(timing)
         out = {k: float(v) for k, v in metrics.items()}
         out.update(timing)
+        out["step_traces"] = self._step.n_traces
         out["reward_mean"] = float(np.mean(rewards))
         out["acc"] = float(np.mean(rewards >= 1.0))
         return out

@@ -163,6 +163,9 @@ class GenerationConfig:
     kernel: str = "ref"          # paged decode KV layout: "ref" gathers
     # pages into a dense-width copy per step, "pallas" reads the page
     # pool in place (kernels.paged_attn; interpret-mode off-TPU)
+    sync_each_tick: bool = False  # block on device results inside the
+    # generate call for honest per-call latency stats; off by default —
+    # the sync serializes dispatch (dirlint: hot-sync)
 
     def sampling(self, **overrides) -> SamplingParams:
         """The default per-request params this config implies."""

@@ -101,6 +101,10 @@ class EngineStats:
     # execution mode of the paged Pallas kernels ("compiled" |
     # "interpret", "" when no kernel is launched)
     kernel_mode: str = ""
+    # continuous: compilations of the scheduler's pool advance
+    # (TraceGuard mirror) — the zero-retrace contract keeps this at 1
+    # across arbitrary per-request SamplingParams mixes
+    advance_traces: int = 0
     # continuous: per-completion admit -> finish latency, in scheduler
     # ticks (one tick = one block-advance over the pool).  Bounded: a
     # long-lived server keeps the most recent window, not every request
@@ -221,7 +225,9 @@ class RolloutEngine:
         if self.gen_cfg.batching == "static":
             gen = self._gen_jit(params, jnp.asarray(prompt_tokens),
                                 jnp.asarray(prompt_blocks), rng, **vec_kw)
-            jax.block_until_ready(gen["tokens"])
+            if self.gen_cfg.sync_each_tick:
+                # opt-in: honest wall-clock per call, at dispatch cost
+                jax.block_until_ready(gen["tokens"])  # dirlint: ok(hot-sync)
             self.last_call = {"batching": "static"}
         else:
             gen = self._generate_ids_continuous(params, prompt_tokens,
@@ -324,6 +330,7 @@ class RolloutEngine:
         self.stats.admit_transient_kv_bytes = max(
             self.stats.admit_transient_kv_bytes,
             sched.stats.admit_transient_kv_bytes)
+        self.stats.advance_traces = sched.n_advance_traces
         self.last_call = {
             "batching": "continuous",
             "ticks": sched.stats.ticks - ticks0,

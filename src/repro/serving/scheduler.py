@@ -154,6 +154,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.guards import TraceGuard
 from repro.core import decoding
 from repro.models import attention
 from repro.serving.api import GenerationConfig, Request, SamplingParams
@@ -212,6 +213,9 @@ class SchedulerStats:
     # execution mode of the paged Pallas kernels for this pool shape:
     # "compiled" | "interpret" (kernel="pallas") or "" (no kernel)
     kernel_mode: str = ""
+    # compilations of the jitted pool advance (TraceGuard counter) —
+    # the zero-retrace contract: 1 across any SamplingParams mix
+    advance_traces: int = 0
     # paged cache only
     deferred: int = 0            # admissions deferred for lack of pages
     page_allocs: int = 0
@@ -335,22 +339,36 @@ class SlotScheduler:
         # (backends without donation support just ignore the hint).
         # All sampling parameters live in GenState's per-row vectors;
         # s_max is the single static, so one trace serves every request
-        # mix — n_advance_traces counts compilations to prove it (the
-        # function body below only runs when jax traces it).
-        self.n_advance_traces = 0
+        # mix — each TraceGuard counts compilations to prove it (the
+        # wrapped body only runs when jax traces it).
         s_max = gen_cfg.s_max
 
         def _advance_impl(params, st):
-            self.n_advance_traces += 1
             return decoding.advance_block(model, params, st, s_max=s_max,
                                           kv_kernel=self.kernel)
 
-        self._advance = jax.jit(_advance_impl, donate_argnums=(1,))
-        self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(1,))
-        self._admit_hit_jit = jax.jit(self._admit_hit_impl,
-                                      donate_argnums=(0,))
-        self._admit_suffix_jit = jax.jit(self._admit_suffix_impl,
-                                         donate_argnums=(1,))
+        self._advance = TraceGuard(_advance_impl, donate_argnums=(1,),
+                                   name="advance")
+        self._admit_jit = TraceGuard(self._admit_impl, donate_argnums=(1,),
+                                     name="admit")
+        self._admit_hit_jit = TraceGuard(self._admit_hit_impl,
+                                         donate_argnums=(0,),
+                                         name="admit_hit")
+        self._admit_suffix_jit = TraceGuard(self._admit_suffix_impl,
+                                            donate_argnums=(1,),
+                                            name="admit_suffix")
+
+    @property
+    def n_advance_traces(self) -> int:
+        """Compilations of the pool advance so far (the zero-retrace
+        witness: stays 1 across arbitrary SamplingParams mixes)."""
+        return self._advance.n_traces
+
+    def guard_stats(self) -> dict[str, int]:
+        """Compile counts per jitted entry point."""
+        return {g.name: g.n_traces
+                for g in (self._advance, self._admit_jit,
+                          self._admit_hit_jit, self._admit_suffix_jit)}
 
     # ----------------------------------------------------------- state
     def _transient_kv_bytes(self) -> int:
@@ -918,6 +936,7 @@ class SlotScheduler:
         if self.cache == "paged":
             self._alloc_cursor_pages()
         self._state = self._advance(params, self._state)
+        self.stats.advance_traces = self._advance.n_traces
         self.stats.ticks += 1
         self.stats.slot_ticks += self.n_slots
         self.stats.active_slot_ticks += self.n_active

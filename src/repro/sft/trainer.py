@@ -10,6 +10,7 @@ from typing import Iterator
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.guards import TraceGuard
 from repro.core.block_diffusion import sft_loss
 from repro.optim import adamw
 
@@ -41,16 +42,22 @@ class SFTTrainer:
             metrics = {**metrics, **om, "loss": loss}
             return params, opt_state, metrics
 
-        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        # zero-retrace witness: fixed batch/rng shapes keep this at 1
+        self._step = TraceGuard(step_fn, donate_argnums=(0, 1),
+                                name="sft_step")
 
     def train_step(self, batch: dict, rng) -> dict:
         t0 = time.perf_counter()
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         self.params, self.opt_state, metrics = self._step(
             self.params, self.opt_state, batch, rng)
-        jax.block_until_ready(metrics["loss"])
+        # deliberate: step_seconds must measure the real step, and
+        # metrics are pulled to host right below anyway
+        jax.block_until_ready(metrics["loss"])  # dirlint: ok(hot-sync)
         self.step_seconds.append(time.perf_counter() - t0)
-        return {k: float(v) for k, v in metrics.items()}
+        out = {k: float(v) for k, v in metrics.items()}
+        out["step_traces"] = self._step.n_traces
+        return out
 
     def run(self, batches: Iterator, steps: int, rng, *,
             log_every: int = 10, verbose: bool = True) -> list[dict]:

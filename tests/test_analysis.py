@@ -50,3 +50,287 @@ def test_active_params_moe():
     assert act < 0.45 * total
     dense = configs.get_config("deepseek-7b")
     assert hlo.active_params(dense, 123) == 123
+
+
+# ===========================================================================
+# dirlint: the contract-checking static-analysis pass
+# ===========================================================================
+
+import dataclasses
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.analysis import run_all
+from repro.analysis.astutils import Project
+from repro.analysis import donation, trace_lint
+from repro.analysis.guards import TraceGuard
+from repro.analysis.kernel_contracts import (Launch, capture_launches,
+                                             check_kernels, check_launch,
+                                             check_parity_coverage)
+from repro.analysis.rules import (Finding, RULES, apply_pragmas,
+                                  scan_pragmas)
+
+
+def _project(tmp_path, files: dict) -> Project:
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return Project(tmp_path)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------- rule registry
+
+
+def test_rule_registry_complete():
+    assert set(RULES) == {
+        "trace-branch", "trace-host-pull", "hot-sync",
+        "post-donation-read", "kernel-oob-index", "kernel-scratch-tile",
+        "kernel-plan-matrix", "kernel-parity-coverage"}
+    for rule in RULES.values():
+        assert rule.doc
+
+
+# ------------------------------------------------------- trace hygiene
+
+
+def test_trace_branch_and_host_pull_fire(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import jax
+
+        def step(x):
+            if x > 0:
+                x = x + 1
+            y = x.item()
+            return x * y
+
+        fast_step = jax.jit(step)
+    """})
+    findings = trace_lint.run(project)
+    assert "trace-branch" in _rules(findings)
+    assert "trace-host-pull" in _rules(findings)
+
+
+def test_static_guards_do_not_fire(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import jax
+
+        def sized(x, n, p):
+            if n > 2:                    # static_argnames
+                x = x + n
+            if x.ndim == 3:              # shape metadata
+                x = x[0]
+            if "bias" in p:              # pytree structure
+                x = x + p["bias"]
+            return x
+
+        jitted = jax.jit(sized, static_argnames=("n",))
+    """})
+    assert trace_lint.run(project) == []
+
+
+def test_hot_sync_fires_in_hot_path(tmp_path):
+    project = _project(tmp_path, {"serving/engine.py": """
+        import jax
+
+        class RolloutEngine:
+            def stream(self, x):
+                jax.block_until_ready(x)
+                return x
+    """})
+    findings = trace_lint.run(project)
+    assert _rules(findings) == {"hot-sync"}
+
+
+# ------------------------------------------------------- donation safety
+
+
+def test_post_donation_read_fires(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import jax
+
+        def _adv(state, x):
+            return state
+
+        advance = jax.jit(_adv, donate_argnums=(0,))
+
+        def drive(state, x):
+            out = advance(state, x)
+            return state.tokens
+    """})
+    findings = donation.run(project)
+    assert _rules(findings) == {"post-donation-read"}
+    (f,) = findings
+    assert "state" in f.message and "advance" in f.message
+
+
+def test_post_donation_rebind_is_safe(tmp_path):
+    project = _project(tmp_path, {"mod.py": """
+        import jax
+
+        def _adv(state, x):
+            return state
+
+        advance = jax.jit(_adv, donate_argnums=(0,))
+
+        def drive(state, x):
+            state = advance(state, x)
+            return state.tokens
+    """})
+    assert donation.run(project) == []
+
+
+# ------------------------------------------------------- kernel contracts
+
+
+def _launch(**kw):
+    base = dict(name="k", grid=(3,), num_scalar_prefetch=0,
+                in_specs=[], out_specs=[], scratch=[], operands=[],
+                out_shapes=[], interpret=True)
+    base.update(kw)
+    return Launch(**base)
+
+
+def test_oob_index_map_fires():
+    # grid point i=2 maps to rows [16, 24) of a 16-row operand
+    bad = _launch(
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        operands=[np.zeros((16, 128), np.float32)])
+    findings = check_launch(bad, require_tile=False, path="fix.py",
+                            line=1, where="decode")
+    assert _rules(findings) == {"kernel-oob-index"}
+
+    ok = _launch(
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        operands=[np.zeros((24, 128), np.float32)])
+    assert check_launch(ok, require_tile=False, path="fix.py",
+                        line=1, where="decode") == []
+
+
+def test_misaligned_scratch_fires_only_when_tiled():
+    bad = _launch(scratch=[((16, 1), jnp.int32)])
+    findings = check_launch(bad, require_tile=True, path="fix.py",
+                            line=1, where="prefill")
+    assert _rules(findings) == {"kernel-scratch-tile"}
+    assert check_launch(bad, require_tile=False, path="fix.py",
+                        line=1, where="prefill") == []
+
+
+def test_capture_launches_records_and_short_circuits():
+    def body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    with capture_launches() as launches:
+        out = pl.pallas_call(
+            body, grid=(2,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32),
+        )(jnp.ones((16, 128), jnp.float32))
+    assert out.shape == (16, 128)
+    assert not out.any()                  # body never ran
+    (launch,) = launches
+    assert launch.grid == (2,) and launch.name == "body"
+    # the patch is scoped: outside the context the real pallas_call is back
+    assert "pallas_call" in repr(pl.pallas_call)
+
+
+def test_kernel_plan_matrix_clean_on_cpu():
+    """All four plan_exec combos of both paged kernels (plus
+    block-diff) pass bounds/tiling/abstract-eval on a CPU host."""
+    assert check_kernels() == []
+
+
+def test_parity_coverage_clean_and_fires(tmp_path):
+    assert check_parity_coverage() == []
+
+    bad = tmp_path / "t.py"
+    bad.write_text(textwrap.dedent("""
+        def test_decode_only():
+            out = paged_decode_attention(q, k, v, block_table=bt)
+    """))
+    findings = check_parity_coverage(tests_path=bad)
+    rules = _rules(findings)
+    assert rules == {"kernel-parity-coverage"}
+    msgs = " ".join(f.message for f in findings)
+    assert "paged_prefill_attention" in msgs     # prefill never exercised
+    assert "window" in msgs or "softcap" in msgs  # decode features missing
+
+
+# ------------------------------------------------------- pragmas
+
+
+def test_pragma_suppression_same_line_and_above():
+    src = ("x = compute()\n"
+           "jax.block_until_ready(x)  # dirlint: ok(hot-sync)\n"
+           "# dirlint: ok(trace-branch, trace-host-pull)\n"
+           "y = float(x)\n")
+    pragmas = {"f.py": scan_pragmas(src)}
+    out = apply_pragmas(
+        [Finding("hot-sync", "f.py", 2, "m"),
+         Finding("trace-host-pull", "f.py", 4, "m"),
+         Finding("hot-sync", "f.py", 4, "m")], pragmas)
+    assert [f.suppressed for f in out] == [True, True, False]
+
+
+# ------------------------------------------------------- whole repo
+
+
+def test_repo_has_zero_unsuppressed_findings():
+    findings = run_all()
+    loud = [f for f in findings if not f.suppressed]
+    assert loud == [], "\n".join(f.format() for f in loud)
+    # the deliberate, pragma'd syncs are still visible to --verbose
+    assert any(f.suppressed and f.rule == "hot-sync" for f in findings)
+
+
+# ------------------------------------------------------- TraceGuard
+
+
+def test_traceguard_counts_compiles_not_calls():
+    def f(x, y):
+        return x + y
+
+    g = TraceGuard(f, name="g")
+    a = jnp.ones((4,))
+    g(a, a)
+    g(a, a)                               # cache hit
+    assert g.n_traces == 1
+    g(jnp.ones((8,)), jnp.ones((8,)))     # new shape -> retrace
+    assert g.n_traces == 2
+    assert g.stats() == {"name": "g", "n_traces": 2}
+    g.reset()
+    assert g.n_traces == 0
+    g(a, a)                               # cache survives reset()
+    assert g.n_traces == 0
+
+
+def test_traceguard_static_argnames_bind_positionally():
+    def f(x, n):
+        return x * n
+
+    g = TraceGuard(f, static_argnames=("n",))
+    out = g(jnp.ones((2,)), 3)            # n passed positionally
+    assert float(out[0]) == 3.0
+    assert g.n_traces == 1
+    g(jnp.ones((2,)), 3)
+    assert g.n_traces == 1
+    g(jnp.ones((2,)), 4)                  # new static value -> retrace
+    assert g.n_traces == 2
+
+
+def test_guard_stats_surface_through_stats_dataclasses():
+    from repro.serving.engine import EngineStats
+    from repro.serving.scheduler import SchedulerStats
+    assert "advance_traces" in {f.name
+                                for f in dataclasses.fields(SchedulerStats)}
+    assert "advance_traces" in {f.name
+                                for f in dataclasses.fields(EngineStats)}
