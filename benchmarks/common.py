@@ -7,7 +7,13 @@ Suites that track a perf trajectory across PRs write
 job replays them on tiny shapes, validating the emitted schema with
 ``validate_bench_json`` — so a suite that silently stops emitting (or
 changes shape) fails the push, not the next reader.
-"""
+
+Observability artifacts (PR 8): ``write_trace_artifact`` /
+``write_metrics_artifact`` drop Chrome-trace / metrics-JSON files into
+``benchmarks/artifacts/`` (gitignored) through ``repro.obs.export``,
+then immediately re-read them through the matching ``validate_*`` —
+every artifact a bench emits is schema-checked at the moment it is
+written, and CI's bench-smoke job uploads the directory."""
 
 from __future__ import annotations
 
@@ -92,6 +98,41 @@ def write_bench_json(suite: str, entries: list[dict]) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
+    return path
+
+
+# ------------------------------------------------- obs artifacts (PR 8)
+
+def artifacts_dir() -> str:
+    """``benchmarks/artifacts/`` — per-run trace/metrics artifacts
+    (gitignored; uploaded by CI's bench-smoke job)."""
+    d = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "artifacts")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def write_trace_artifact(name: str, spans, metadata: dict | None = None
+                         ) -> str:
+    """Write + validate ``artifacts/<name>.trace.json`` (Chrome trace).
+
+    Validation happens on the re-read file, so a schema regression in
+    the exporter fails the bench run itself, not a later Perfetto
+    session.  Returns the written path."""
+    from repro.obs import export
+    path = os.path.join(artifacts_dir(), f"{name}.trace.json")
+    export.write_chrome_trace(path, spans,
+                              metadata={"bench": name, **(metadata or {})})
+    export.validate_chrome_trace(path)
+    return path
+
+
+def write_metrics_artifact(name: str, *registries) -> str:
+    """Write + validate ``artifacts/<name>.metrics.json``."""
+    from repro.obs import export
+    path = os.path.join(artifacts_dir(), f"{name}.metrics.json")
+    export.write_metrics_json(path, *registries)
+    export.validate_metrics_json(path)
     return path
 
 

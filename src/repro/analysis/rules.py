@@ -81,6 +81,15 @@ class HotSyncRule(Rule):
            "or per-step training hot paths (serializes dispatch)")
 
 
+@register
+class ObsInTraceRule(Rule):
+    id = "obs-in-trace"
+    doc = ("no obs.metrics / obs.trace call reachable inside a jitted "
+           "body — instrumentation is host-side bookkeeping between "
+           "dispatches; inside a trace it records trace-time garbage "
+           "(or leaks a tracer into the span/metric)")
+
+
 # --------------------------------------------------------------------------
 # pass 2: donation safety (analysis.donation)
 # --------------------------------------------------------------------------

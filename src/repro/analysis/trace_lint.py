@@ -22,6 +22,16 @@ interprocedurally.  Inside tainted code it flags:
                      inside a registered per-tick/per-step hot path
                      (scheduler tick, engine drain/stream, trainer
                      step) — host syncs that serialize dispatch.
+``obs-in-trace``     any ``obs.metrics`` / ``obs.trace`` call inside
+                     jit-reachable code — instrumentation is host-side
+                     bookkeeping *between* dispatches; inside a trace
+                     it runs at trace time (recording garbage once per
+                     compilation) or leaks a tracer into a span or
+                     metric.  Detected via import-alias calls
+                     (``trace.Tracer(...)``, ``obs.MetricsRegistry``),
+                     resolved callees living in an obs module, locally
+                     constructed obs handles, and ``*.tracer.<span-
+                     API>()`` method chains.
 
 Taint is deliberately shape-transparent: ``x.shape`` / ``x.ndim`` /
 ``x.dtype`` / ``len(x)`` of a tracer are static, so branching on them
@@ -33,7 +43,7 @@ from __future__ import annotations
 import ast
 from collections import deque
 
-from .astutils import FunctionInfo, Project
+from .astutils import FunctionInfo, Project, attr_path
 from .rules import Finding
 
 __all__ = ["run", "HOT_PATHS", "EXTRA_ROOTS"]
@@ -72,6 +82,17 @@ _STATIC_CALLS = {"isinstance", "len", "type", "hasattr", "callable",
 _HOST_PULL_NAMES = {"float", "int", "bool"}
 _HOST_PULL_METHODS = {"item", "tolist"}
 _SYNC_ATTRS = {"block_until_ready", "device_get"}
+
+# obs modules whose calls must never be jit-reachable (profile/export
+# are not listed: annotate() is trace-legal and exporters are cold
+# paths no jit site can reach)
+_OBS_MODULES = {"repro.obs", "repro.obs.metrics", "repro.obs.trace"}
+# Tracer's recording API: a `<anything>.tracer.<one of these>()` chain
+# is an obs call even when the receiver cannot be resolved statically
+# (e.g. `self.tracer.span(...)`).  Deliberately excludes generic names
+# like `set`/`add` that jnp's `.at[...]` API shares.
+_TRACER_METHODS = {"span", "begin", "end", "instant", "amend",
+                   "snapshot"}
 
 _DEFS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
 
@@ -261,6 +282,9 @@ class _FnTaint:
         self.findings = findings
         self.enqueue = enqueue
         self._flagged: set[tuple] = set()
+        # local names bound to obs objects (`t = Tracer(...)`): later
+        # method calls on them are obs calls even without resolution
+        self._obs_handles: set[str] = set()
 
     def run(self):
         for _ in range(2):        # fixpoint for loop-carried taint
@@ -373,6 +397,11 @@ class _FnTaint:
             return
         self.scan_calls(s)
         if isinstance(s, ast.Assign):
+            if isinstance(s.value, ast.Call) and \
+                    self._obs_call_kind(s.value) is not None:
+                for tgt in s.targets:
+                    if isinstance(tgt, ast.Name):
+                        self._obs_handles.add(tgt.id)
             t = self.is_tainted(s.value)
             if isinstance(s.value, ast.Tuple) and len(s.targets) == 1 \
                     and isinstance(s.targets[0], ast.Tuple) \
@@ -455,7 +484,50 @@ class _FnTaint:
             if _is_jit_site(self.module, node):
                 continue
             self._check_sinks(node)
+            if self._check_obs(node):
+                continue        # don't chase taint into obs internals
             self._edges(node)
+
+    def _obs_call_kind(self, call: ast.Call) -> str | None:
+        """How this call lands in repro.obs (a display string), or None."""
+        f = call.func
+        if isinstance(f, ast.Attribute):
+            root = f.value
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                m = self.r.project.module_of_alias(self.module, root.id)
+                if m is not None and m.name in _OBS_MODULES:
+                    return f"{m.name}.{f.attr}"
+                if root.id in self._obs_handles:
+                    return f"{root.id}.{f.attr}"
+            if f.attr in _TRACER_METHODS:
+                p = attr_path(f)
+                # `<anything>.tracer.span(...)` — the conventional
+                # handle name makes the receiver recognizable even when
+                # its type cannot be resolved (self.tracer, eng.tracer)
+                if p is not None and "tracer" in p.split(".")[:-1]:
+                    return p
+        elif isinstance(f, ast.Name):
+            src = self.module.from_imports.get(f.id)
+            if src is not None and src[0] in _OBS_MODULES:
+                return f"{src[0]}.{src[1]}"
+        callee = self.r.resolve(self.module, self.fi.qualname,
+                                self.fi.cls_name, f)
+        if callee is not None and callee.module.name in _OBS_MODULES:
+            return f"{callee.module.name}:{callee.qualname}"
+        return None
+
+    def _check_obs(self, call: ast.Call) -> bool:
+        kind = self._obs_call_kind(call)
+        if kind is None:
+            return False
+        self.flag("obs-in-trace", call,
+                  f"obs call {kind}() reachable in jitted body "
+                  f"{self.fi.qualname}; metrics/spans are host-side "
+                  "bookkeeping — record them between dispatches, not "
+                  "inside the trace")
+        return True
 
     def _check_sinks(self, call: ast.Call):
         f = call.func

@@ -64,6 +64,19 @@ def main():
                     help="paged: share committed prompt pages across "
                          "requests (default: on when --cache paged and "
                          "the backbone is pure-attention)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(request lifecycles + scheduler tick phases; "
+                         "open in Perfetto / chrome://tracing). A "
+                         ".jsonl path dumps raw spans instead")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write end-of-run metrics: .prom/.txt = "
+                         "Prometheus text exposition, anything else = "
+                         "the metrics JSON envelope")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a real XLA profiler trace of the run "
+                         "into DIR (jax.profiler; open in TensorBoard "
+                         "or Perfetto) — the honest device-time view")
     args = ap.parse_args()
 
     import jax
@@ -73,6 +86,7 @@ def main():
     from repro.data.math_tasks import sample_problem
     from repro.data.tokenizer import ByteTokenizer
     from repro.models.model import BlockDiffLM
+    from repro.obs import export, profile
     from repro.serving.engine import (GenerationConfig, RolloutEngine,
                                       SamplingParams)
     from repro.serving.server import ModelServer
@@ -91,7 +105,8 @@ def main():
         tau=args.tau[0], temperature=args.temperature[0],
         batching=args.batching, n_slots=args.slots,
         cache=args.cache, n_pages=args.pages,
-        prefix_cache=args.prefix_cache, kernel=args.kernel))
+        prefix_cache=args.prefix_cache, kernel=args.kernel,
+        trace=args.trace_out is not None))
     rng = random.Random(0)
     prompts = [sample_problem(rng, level=0).prompt
                for _ in range(args.requests)]
@@ -103,25 +118,50 @@ def main():
         eos_id=ByteTokenizer().eos_id)
         for i in range(args.requests)]
     mixed = len(args.tau) > 1 or len(args.temperature) > 1
-    if args.batching == "continuous":
-        # same per-request keys as generate_texts(rng=PRNGKey(1)) uses
-        # on the static path, so the printed completions match the
-        # --batching static run byte-for-byte (the cheap parity check)
-        keys = jax.random.split(jax.random.PRNGKey(1), args.requests)
-        for p, sp, k in zip(prompts, sampling, keys):
-            engine.submit(p, k, params=sp)
-        outs = {out.uid: out for out in engine.stream()}
-        for uid in sorted(outs):
-            out = outs[uid]
-            tag = f"tau={out.params.tau:g} " if mixed else ""
-            print(f"{prompts[uid]!r} -> {out.text!r}")
-            print(f"  [{uid}] {tag}finish={out.finish_reason} "
-                  f"latency={out.latency_ticks} ticks")
-    else:
-        outs = engine.generate_texts(prompts, jax.random.PRNGKey(1),
-                                     sampling=sampling)
-        for p, o in zip(prompts, outs):
-            print(f"{p!r} -> {o!r}")
+    # opt-in device profiling: a no-op context unless --profile-dir
+    with profile.capture(args.profile_dir) as profiling:
+        if args.batching == "continuous":
+            # same per-request keys as generate_texts(rng=PRNGKey(1))
+            # uses on the static path, so the printed completions match
+            # the --batching static run byte-for-byte (parity check)
+            keys = jax.random.split(jax.random.PRNGKey(1), args.requests)
+            for p, sp, k in zip(prompts, sampling, keys):
+                engine.submit(p, k, params=sp)
+            outs = {out.uid: out for out in engine.stream()}
+            for uid in sorted(outs):
+                out = outs[uid]
+                tag = f"tau={out.params.tau:g} " if mixed else ""
+                print(f"{prompts[uid]!r} -> {out.text!r}")
+                print(f"  [{uid}] {tag}finish={out.finish_reason} "
+                      f"latency={out.latency_ticks} ticks")
+        else:
+            outs = engine.generate_texts(prompts, jax.random.PRNGKey(1),
+                                         sampling=sampling)
+            for p, o in zip(prompts, outs):
+                print(f"{p!r} -> {o!r}")
+    if profiling:
+        print(f"[obs] XLA profiler trace -> {args.profile_dir}")
+    if args.trace_out:
+        if args.trace_out.endswith(".jsonl"):
+            n = export.write_jsonl(args.trace_out,
+                                   engine.tracer.snapshot())
+            print(f"[obs] {n} spans -> {args.trace_out}")
+        else:
+            export.write_chrome_trace(
+                args.trace_out, engine.tracer.snapshot(),
+                metadata={"tool": "repro.launch.serve"})
+            print(f"[obs] Chrome trace ({len(engine.tracer)} spans, "
+                  f"{engine.tracer.dropped} dropped) -> "
+                  f"{args.trace_out}")
+    if args.metrics_out:
+        regs = [engine.stats.registry]
+        if engine._sched is not None:
+            regs.append(engine._sched.stats.registry)
+        if args.metrics_out.endswith((".prom", ".txt")):
+            export.write_prometheus(args.metrics_out, *regs)
+        else:
+            export.write_metrics_json(args.metrics_out, *regs)
+        print(f"[obs] metrics -> {args.metrics_out}")
     s = engine.stats
     line = (f"[engine] {s.rollouts} rollouts | {s.total_tokens} tokens | "
             f"{s.tokens_per_step:.2f} tokens/denoise-step | "
@@ -129,7 +169,8 @@ def main():
     if args.batching == "continuous":
         line += (f" | slot-util {s.utilization:.0%}"
                  f" | latency p50 {s.latency_p50:.0f}"
-                 f"/p95 {s.latency_p95:.0f} ticks")
+                 f"/p95 {s.latency_p95:.0f}"
+                 f"/p99 {s.latency_p99:.0f} ticks")
         if args.cache == "paged" and engine.scheduler.prefix is not None:
             line += f" | prefix-hit {s.prefix_hit_rate:.0%}"
         if args.cache == "paged":

@@ -1,0 +1,256 @@
+"""Exporters: Chrome trace-event JSON, Prometheus text, metrics JSON, JSONL.
+
+The tracer and registries are in-memory substrates; this module turns
+them into artifacts:
+
+* ``write_chrome_trace(path, spans, ...)`` — the Trace Event Format
+  consumed by Perfetto and ``chrome://tracing``.  Spans become ``"X"``
+  (complete) events, instants become ``"i"``; each distinct span
+  ``track`` becomes one display thread (named via ``"M"`` metadata
+  events), so a serving trace renders as one swim-lane per decode slot
+  plus one for the scheduler tick phases and one per trainer phase.
+  Perfetto nests overlapping events on a track by time containment, so
+  tick sub-spans (admit / advance / harvest) appear inside their tick.
+
+* ``prometheus_text(...)`` — the text exposition format
+  (``# HELP`` / ``# TYPE`` / ``name{labels} value``); histograms export
+  their ``_count`` / ``_sum`` plus quantile gauges from the bounded
+  window.
+
+* ``write_metrics_json(path, ...)`` — a flat JSON envelope of
+  ``Sample`` records, the machine-readable sibling used by serve_bench
+  artifacts and CI schema checks.
+
+* ``write_jsonl(path, spans)`` — raw span dump, one JSON object per
+  line, for ad-hoc analysis without the Chrome schema.
+
+Each write_* has a validate_* counterpart that re-reads the artifact
+and checks structural invariants; CI's bench-smoke job runs those on
+the uploaded artifacts so a format regression fails the build rather
+than a later Perfetto session.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable
+
+from .metrics import MetricsRegistry, Sample
+from .trace import Span
+
+__all__ = [
+    "chrome_trace_events", "write_chrome_trace", "validate_chrome_trace",
+    "prometheus_text", "write_prometheus",
+    "metrics_payload", "write_metrics_json", "validate_metrics_json",
+    "write_jsonl",
+]
+
+TRACE_SCHEMA_VERSION = 1
+
+
+# --------------------------------------------------------------------------
+# Chrome trace-event JSON
+# --------------------------------------------------------------------------
+
+def _json_safe(v):
+    """Chrome trace args must be JSON — stringify anything exotic."""
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    return str(v)
+
+
+def chrome_trace_events(spans: Iterable[Span], *, pid: int = 1) -> list[dict]:
+    """Lower spans to trace-event dicts (ts/dur in integer microseconds).
+
+    Tracks are assigned tids in first-seen order; a ``thread_name``
+    metadata event labels each so Perfetto shows the track name, and a
+    ``process_name`` event labels the single process.
+    """
+    tids: dict[str, int] = {}
+    events: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+        "args": {"name": "dirl"},
+    }]
+
+    def tid_of(track: str) -> int:
+        tid = tids.get(track)
+        if tid is None:
+            tid = tids[track] = len(tids) + 1
+            events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                           "tid": tid, "args": {"name": track}})
+        return tid
+
+    for sp in spans:
+        ts = round(sp.t0 * 1e6)
+        ev = {
+            "name": sp.name, "cat": sp.cat, "pid": pid,
+            "tid": tid_of(sp.track), "ts": ts,
+            "args": {k: _json_safe(v) for k, v in sp.args.items()},
+        }
+        if sp.t1 >= sp.t0 and sp.t1 > sp.t0:
+            ev["ph"] = "X"
+            ev["dur"] = max(round(sp.t1 * 1e6) - ts, 1)
+        else:
+            ev["ph"] = "i"
+            ev["s"] = "t"           # instant scoped to its thread/track
+        events.append(ev)
+    return events
+
+
+def write_chrome_trace(path, spans: Iterable[Span], *,
+                       metadata: dict | None = None) -> dict:
+    """Write a Perfetto-loadable trace file; returns the payload."""
+    payload = {
+        "traceEvents": chrome_trace_events(spans),
+        "displayTimeUnit": "ms",
+        "otherData": {"schema_version": TRACE_SCHEMA_VERSION,
+                      **(metadata or {})},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return payload
+
+
+def validate_chrome_trace(path) -> dict:
+    """Re-read a trace artifact and check trace-event invariants.
+
+    Raises ``ValueError`` on the first violation; returns the payload
+    so callers can assert content (span names, labels) on top.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    if not isinstance(payload, dict) or "traceEvents" not in payload:
+        raise ValueError(f"{path}: not a trace-event JSON object")
+    events = payload["traceEvents"]
+    if not isinstance(events, list) or not events:
+        raise ValueError(f"{path}: empty traceEvents")
+    tids_named = set()
+    for i, ev in enumerate(events):
+        for k in ("name", "ph", "pid", "tid"):
+            if k not in ev:
+                raise ValueError(f"{path}: event {i} missing {k!r}")
+        ph = ev["ph"]
+        if ph == "M":
+            if ev["name"] == "thread_name":
+                tids_named.add(ev["tid"])
+            continue
+        if ph not in ("X", "i"):
+            raise ValueError(f"{path}: event {i} has unknown ph {ph!r}")
+        if not isinstance(ev.get("ts"), int) or ev["ts"] < 0:
+            raise ValueError(f"{path}: event {i} bad ts")
+        if ph == "X" and (not isinstance(ev.get("dur"), int)
+                          or ev["dur"] <= 0):
+            raise ValueError(f"{path}: event {i} bad dur")
+        if ev["tid"] not in tids_named:
+            raise ValueError(
+                f"{path}: event {i} on unnamed track tid={ev['tid']}")
+    return payload
+
+
+# --------------------------------------------------------------------------
+# Prometheus text exposition
+# --------------------------------------------------------------------------
+
+def _label_str(pairs: tuple) -> str:
+    if not pairs:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in pairs)
+    return "{" + body + "}"
+
+
+def prometheus_text(*registries: MetricsRegistry) -> str:
+    """Render registries in the Prometheus text exposition format.
+
+    Histogram samples expand into ``_count`` / ``_sum`` counters plus
+    ``{quantile=...}`` gauges over the bounded window; ``info``
+    instruments follow the ``_info{...} 1`` convention.
+    """
+    lines: list[str] = []
+    seen_headers: set[str] = set()
+
+    def header(name: str, kind: str, help: str):
+        if name not in seen_headers:
+            seen_headers.add(name)
+            if help:
+                lines.append(f"# HELP {name} {help}")
+            lines.append(f"# TYPE {name} {kind}")
+
+    for reg in registries:
+        for s in reg.collect():
+            if s.kind == "histogram":
+                header(s.name, "summary", s.help)
+                ls = _label_str(s.labels)
+                lines.append(f"{s.name}_count{ls} {s.value['count']}")
+                lines.append(f"{s.name}_sum{ls} {s.value['sum']}")
+                for q, key in ((0.5, "p50"), (0.95, "p95"), (0.99, "p99")):
+                    qls = _label_str(s.labels + (("quantile", q),))
+                    lines.append(f"{s.name}{qls} {s.value[key]}")
+            elif s.kind == "info":
+                header(s.name + "_info", "gauge", s.help)
+                ls = _label_str(s.labels + (("value", s.value),))
+                lines.append(f"{s.name}_info{ls} 1")
+            else:
+                header(s.name, s.kind, s.help)
+                lines.append(f"{s.name}{_label_str(s.labels)} {s.value}")
+    return "\n".join(lines) + "\n"
+
+
+def write_prometheus(path, *registries: MetricsRegistry) -> None:
+    with open(path, "w") as f:
+        f.write(prometheus_text(*registries))
+
+
+# --------------------------------------------------------------------------
+# Metrics JSON (machine-readable envelope for bench artifacts / CI)
+# --------------------------------------------------------------------------
+
+def metrics_payload(*registries: MetricsRegistry) -> dict:
+    return {
+        "schema_version": TRACE_SCHEMA_VERSION,
+        "metrics": [dataclasses.asdict(s)
+                    for reg in registries for s in reg.collect()],
+    }
+
+
+def write_metrics_json(path, *registries: MetricsRegistry) -> dict:
+    payload = metrics_payload(*registries)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return payload
+
+
+def validate_metrics_json(path) -> dict:
+    """Schema check for the metrics envelope; raises ``ValueError``."""
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema_version") != TRACE_SCHEMA_VERSION:
+        raise ValueError(f"{path}: bad schema_version")
+    metrics = payload.get("metrics")
+    if not isinstance(metrics, list):
+        raise ValueError(f"{path}: metrics must be a list")
+    kinds = set(Sample.__dataclass_fields__)  # field names, reused as check
+    for i, m in enumerate(metrics):
+        if not isinstance(m, dict) or not kinds.issuperset(m) \
+                or "name" not in m or "kind" not in m:
+            raise ValueError(f"{path}: metric {i} malformed: {m!r}")
+        if m["kind"] not in ("counter", "gauge", "histogram", "info"):
+            raise ValueError(f"{path}: metric {i} unknown kind {m['kind']!r}")
+    return payload
+
+
+# --------------------------------------------------------------------------
+# Raw span dump
+# --------------------------------------------------------------------------
+
+def write_jsonl(path, spans: Iterable[Span]) -> int:
+    """One JSON object per span per line; returns the line count."""
+    n = 0
+    with open(path, "w") as f:
+        for sp in spans:
+            rec = {"name": sp.name, "cat": sp.cat, "track": sp.track,
+                   "t0": sp.t0, "t1": sp.t1, "dur": sp.dur,
+                   "args": {k: _json_safe(v) for k, v in sp.args.items()}}
+            f.write(json.dumps(rec) + "\n")
+            n += 1
+    return n

@@ -1,0 +1,346 @@
+"""Typed metrics registry: Counter / Gauge / Histogram / Info.
+
+Design constraints, in order:
+
+* **Cheap host-side updates.**  Every instrument is a plain Python
+  object whose hot operation (``inc`` / ``set`` / ``observe``) is one
+  attribute read and one write — no locks, no string formatting, no
+  timestamping.  The serving scheduler updates these once per *tick*
+  (and mostly keeps mutating its stats dataclass directly, see below),
+  so instrumentation cost is noise against a jit dispatch.
+
+* **Legacy stats surfaces stay intact.**  ``SchedulerStats`` /
+  ``EngineStats`` predate the registry and are mutated as plain
+  dataclass attributes all over the serving stack (``stats.ticks += 1``)
+  and reset wholesale (``sched.stats = SchedulerStats()``).  Rather
+  than funnel every call site through instrument methods, an instrument
+  can be *bound* to an object attribute (``bind=(obj, attr)``): the
+  dataclass field becomes the instrument's storage, so the field and
+  the registry are two views of one value — attribute writes show up in
+  ``collect()``, instrument ``inc()`` shows up in the field, and no
+  call site changes.  Unbound instruments (trainer phase timings, span
+  histograms) own their storage.
+
+* **Monotonic vs resettable is explicit.**  ``Counter`` only goes up
+  (``inc`` rejects negative deltas) and survives ``registry.reset()``;
+  ``Gauge`` / ``Histogram`` are resettable.  ``counter.reset()`` exists
+  for the process-restart analogue (a fresh stats object) but must be
+  asked for by name.
+
+Label sets follow the Prometheus model: constructing an instrument with
+``labelnames`` yields a *family*; ``family.labels(phase="rollout")``
+returns (creating on first use) the child instrument for that label
+value combination.  ``registry.collect()`` flattens everything into
+``Sample`` records the exporters consume.
+
+Naming convention: registries carry a ``namespace`` prefix
+(``dirl_scheduler`` / ``dirl_engine`` / ``dirl_trainer``), instruments
+use snake_case unit-suffixed names (``_seconds``, ``_bytes``,
+``_total`` implied for counters) — the exported name is
+``<namespace>_<name>``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["Counter", "Gauge", "Histogram", "Info", "MetricsRegistry",
+           "Sample"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One exported measurement: a flattened (name, labels, value)."""
+    name: str                 # full name incl. registry namespace
+    kind: str                 # counter | gauge | histogram | info
+    labels: tuple             # sorted (key, value) pairs
+    value: object             # number, str (info), or dict (histogram)
+    help: str = ""
+
+
+class _Storage:
+    """Value cell: either owned, or a view over ``(obj, attr)``."""
+
+    __slots__ = ("_obj", "_attr", "_value")
+
+    def __init__(self, bind=None, initial=0):
+        if bind is None:
+            self._obj = None
+            self._value = initial
+        else:
+            self._obj, self._attr = bind
+
+    def get(self):
+        if self._obj is None:
+            return self._value
+        return getattr(self._obj, self._attr)
+
+    def set(self, v):
+        if self._obj is None:
+            self._value = v
+        else:
+            setattr(self._obj, self._attr, v)
+
+
+class _Instrument:
+    """Base: name, help, storage, and the kind tag exporters switch on."""
+
+    kind = ""
+    resettable = True
+
+    def __init__(self, name: str, help: str = "", *, bind=None,
+                 labels: tuple = ()):
+        self.name = name
+        self.help = help
+        self.label_pairs = labels          # sorted (key, value) tuple
+        self._cell = _Storage(bind=bind, initial=self._initial())
+
+    @staticmethod
+    def _initial():
+        return 0
+
+    @property
+    def value(self):
+        return self._cell.get()
+
+    def reset(self):
+        self._cell.set(self._initial())
+
+    def samples(self, prefix: str) -> Iterator[Sample]:
+        yield Sample(prefix + self.name, self.kind, self.label_pairs,
+                     self.value, self.help)
+
+
+class Counter(_Instrument):
+    """Monotonically increasing count.  ``inc`` rejects negative deltas;
+    ``registry.reset()`` leaves counters alone (monotonic semantics —
+    a counter restarts only with a fresh stats object or an explicit
+    ``counter.reset()``)."""
+
+    kind = "counter"
+    resettable = False
+
+    def inc(self, n=1):
+        if n < 0:
+            raise ValueError(
+                f"counter {self.name!r} cannot decrease (inc({n}))")
+        self._cell.set(self._cell.get() + n)
+
+
+class Gauge(_Instrument):
+    """A value that can go up and down (pool occupancy, peak trackers)."""
+
+    kind = "gauge"
+
+    def set(self, v):
+        self._cell.set(v)
+
+    def add(self, n):
+        self._cell.set(self._cell.get() + n)
+
+    def max(self, v):
+        """Peak tracker: keep the running maximum."""
+        cur = self._cell.get()
+        if v > cur:
+            self._cell.set(v)
+
+
+class Info(_Instrument):
+    """A small string annotation (kernel exec mode, cache layout)."""
+
+    kind = "info"
+
+    @staticmethod
+    def _initial():
+        return ""
+
+    def set(self, v: str):
+        self._cell.set(v)
+
+
+class Histogram(_Instrument):
+    """Distribution instrument with a *bounded* reservoir.
+
+    Keeps a ``deque(maxlen=reservoir)`` of recent observations for
+    percentile queries plus unbounded-safe cumulative ``count``/``sum``
+    — memory stays O(reservoir) no matter how long the server runs.
+    Percentiles are computed over the reservoir (the recent window),
+    which is exactly the SLO-relevant view for a long-lived server.
+
+    Quacks enough like the deque it replaced (``append`` / ``__iter__``
+    / ``__len__`` / ``__bool__`` / ``maxlen``) that
+    ``EngineStats.latencies`` call sites did not have to change:
+    ``append`` is an alias of ``observe``.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "", *, reservoir: int = 4096,
+                 labels: tuple = ()):
+        super().__init__(name, help, labels=labels)
+        self._window: deque = deque(maxlen=reservoir)
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v):
+        self._window.append(v)
+        self.count += 1
+        self.sum += v
+
+    # deque-compatible view (EngineStats.latencies legacy surface)
+    append = observe
+
+    def __iter__(self):
+        return iter(self._window)
+
+    def __len__(self):
+        return len(self._window)
+
+    def __bool__(self):
+        return bool(self._window)
+
+    def __eq__(self, other):
+        if isinstance(other, Histogram):
+            return list(self._window) == list(other._window) \
+                and self.count == other.count
+        return NotImplemented
+
+    @property
+    def maxlen(self) -> int:
+        return self._window.maxlen
+
+    def percentile(self, q: float) -> float:
+        """q-th percentile over the bounded recent window (0 if empty)."""
+        if not self._window:
+            return 0.0
+        return float(np.percentile(np.asarray(self._window), q))
+
+    def reset(self):
+        self._window.clear()
+        self.count = 0
+        self.sum = 0.0
+
+    def samples(self, prefix: str) -> Iterator[Sample]:
+        yield Sample(prefix + self.name, self.kind, self.label_pairs,
+                     {"count": self.count, "sum": self.sum,
+                      "p50": self.percentile(50),
+                      "p95": self.percentile(95),
+                      "p99": self.percentile(99)}, self.help)
+
+
+class _Family:
+    """A labeled instrument family: ``labels(**kv)`` returns the child
+    for that label-value combination, creating it on first use."""
+
+    def __init__(self, cls, name, help, labelnames, kwargs):
+        self._cls = cls
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._kwargs = kwargs
+        self._children: dict[tuple, _Instrument] = {}
+
+    def labels(self, **kv) -> _Instrument:
+        if set(kv) != set(self.labelnames):
+            raise ValueError(
+                f"{self.name}: expected labels {self.labelnames}, "
+                f"got {tuple(kv)}")
+        key = tuple(sorted(kv.items()))
+        child = self._children.get(key)
+        if child is None:
+            child = self._cls(self.name, self.help, labels=key,
+                              **self._kwargs)
+            self._children[key] = child
+        return child
+
+    def reset(self):
+        for c in self._children.values():
+            if c.resettable:
+                c.reset()
+
+    def samples(self, prefix: str) -> Iterator[Sample]:
+        for key in sorted(self._children):
+            yield from self._children[key].samples(prefix)
+
+
+class MetricsRegistry:
+    """One namespace of instruments; the unit exporters consume.
+
+    Each stats surface owns its registry (``SchedulerStats.registry``,
+    ``EngineStats.registry``, trainer ``metrics``) — resetting stats by
+    constructing a fresh object therefore also resets the exported view,
+    which is exactly the legacy warmup pattern's expectation.
+    """
+
+    def __init__(self, namespace: str = ""):
+        self.namespace = namespace
+        self._instruments: dict[str, object] = {}
+
+    # ------------------------------------------------------ constructors
+    def _make(self, cls, name, help, labelnames, **kwargs):
+        if name in self._instruments:
+            existing = self._instruments[name]
+            if isinstance(existing, (_Family, cls)):
+                return existing
+            raise ValueError(f"metric {name!r} already registered as "
+                             f"{type(existing).__name__}")
+        if labelnames:
+            inst = _Family(cls, name, help, labelnames, kwargs)
+        else:
+            inst = cls(name, help, **kwargs)
+        self._instruments[name] = inst
+        return inst
+
+    def counter(self, name, help="", labelnames=(), *, bind=None):
+        return self._make(Counter, name, help, labelnames, bind=bind)
+
+    def gauge(self, name, help="", labelnames=(), *, bind=None):
+        return self._make(Gauge, name, help, labelnames, bind=bind)
+
+    def info(self, name, help="", *, bind=None):
+        return self._make(Info, name, help, (), bind=bind)
+
+    def histogram(self, name, help="", labelnames=(), *,
+                  reservoir: int = 4096):
+        return self._make(Histogram, name, help, labelnames,
+                          reservoir=reservoir)
+
+    def adopt(self, name: str, instrument) -> None:
+        """Register an externally constructed instrument (e.g. the
+        ``Histogram`` living as a dataclass field)."""
+        assert name not in self._instruments, name
+        instrument.name = name
+        self._instruments[name] = instrument
+
+    # ------------------------------------------------------------ access
+    def get(self, name: str):
+        return self._instruments[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._instruments
+
+    def names(self) -> list[str]:
+        return sorted(self._instruments)
+
+    # ---------------------------------------------------------- lifecycle
+    def reset(self) -> None:
+        """Zero every *resettable* instrument (gauges, histograms,
+        info).  Counters are monotonic and keep their value."""
+        for inst in self._instruments.values():
+            if isinstance(inst, _Family):
+                inst.reset()
+            elif inst.resettable:
+                inst.reset()
+
+    def collect(self) -> list[Sample]:
+        """Flatten every instrument (label children included) into
+        ``Sample`` records, full-named with the registry namespace."""
+        prefix = f"{self.namespace}_" if self.namespace else ""
+        out: list[Sample] = []
+        for name in sorted(self._instruments):
+            out.extend(self._instruments[name].samples(prefix))
+        return out

@@ -1,0 +1,65 @@
+"""Profiler hooks: named XLA scopes and opt-in device trace capture.
+
+The host-side tracer (``obs.trace``) deliberately never syncs the
+device, so its spans measure dispatch, not device latency.  When device
+time is the question, this module is the answer:
+
+``annotate(name)``
+    A ``jax.profiler.TraceAnnotation`` context — a named scope that
+    shows up in XLA profiler timelines (TensorBoard / Perfetto) nested
+    under the launching op.  The serving scheduler wraps
+    ``advance_block`` and the suffix-prefill dispatches; trainers wrap
+    their fused step.  When no profiler session is active these scopes
+    cost a few hundred nanoseconds, so they stay on permanently.
+
+``capture(logdir)``
+    A real profiler session (``jax.profiler.start_trace`` /
+    ``stop_trace``) bracketing a region; artifacts land under
+    ``logdir`` and open in TensorBoard's profile plugin or Perfetto.
+    Wired to ``launch.serve --profile-dir``.  ``logdir=None`` is a
+    no-op, so call sites can pass the CLI flag straight through.
+
+Both degrade to no-ops when ``jax.profiler`` is unavailable (the
+``available()`` probe), keeping the obs package importable on stripped
+builds.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager, nullcontext
+
+try:                                        # pragma: no cover - import guard
+    from jax import profiler as _jprof
+except Exception:                           # pragma: no cover
+    _jprof = None
+
+__all__ = ["annotate", "available", "capture"]
+
+
+def available() -> bool:
+    """True when ``jax.profiler`` annotation/trace APIs are present."""
+    return _jprof is not None and hasattr(_jprof, "TraceAnnotation")
+
+
+def annotate(name: str):
+    """Named profiler scope (no-op context if jax.profiler is absent)."""
+    if not available():
+        return nullcontext()
+    return _jprof.TraceAnnotation(name)
+
+
+@contextmanager
+def capture(logdir: str | None):
+    """Run the body under an XLA profiler trace written to ``logdir``.
+
+    ``None`` (flag unset) or a missing profiler degrade to a plain
+    pass-through so callers need no conditional.
+    """
+    if logdir is None or not available():
+        yield False
+        return
+    _jprof.start_trace(str(logdir))
+    try:
+        yield True
+    finally:
+        _jprof.stop_trace()

@@ -1,0 +1,163 @@
+"""Span tracer: bounded ring buffer of host-wall-clock spans.
+
+The substrate of the request-lifecycle and scheduler-tick views that
+``obs.export`` turns into Chrome trace-event JSON.  Two recording
+styles:
+
+``span(name, ...)``
+    Context manager for code the caller brackets directly (a scheduler
+    tick phase, an engine drain, a trainer phase).  It *always* measures
+    — the yielded ``Span`` carries real ``t0``/``t1`` even when the
+    tracer is disabled — and only *records* into the ring buffer when
+    enabled.  Callers that need the duration for their own stats
+    (``EngineStats.wall_seconds``, trainer phase timings) therefore read
+    it off the span instead of keeping a parallel
+    ``time.perf_counter()`` pair, and the measurement is defined
+    identically whether or not tracing is on.
+
+``begin(key) / end(key)``
+    Open-span bookkeeping for lifecycles that start and finish in
+    different calls — a request's *queued* span opens at ``submit()``
+    and closes at admission; its *decode* span opens at admission and
+    closes at harvest.  Keys are caller-chosen hashables
+    (``("queued", uid)``); ``end`` merges final labels (finish reason,
+    token counts) into the span's args and records it.
+
+Timing contract: timestamps are ``time.perf_counter()`` taken **around
+jit dispatch, never after a device sync** — a span covering
+``advance_block`` measures Python-side dispatch plus whatever the
+async runtime happened to overlap, not device latency.  That keeps the
+tracer legal on per-tick hot paths (the dirlint ``hot-sync`` and
+``obs-in-trace`` contracts); honest device timing is
+``GenerationConfig.sync_each_tick`` or a real ``obs.profile`` capture.
+
+The buffer is a ``deque(maxlen=capacity)``: a long-lived server evicts
+the oldest spans instead of growing without bound, and ``dropped``
+counts evictions so exporters can say the window is partial.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from contextlib import contextmanager
+
+__all__ = ["Span", "Tracer"]
+
+
+@dataclasses.dataclass
+class Span:
+    """One completed (or still-open: ``t1 < 0``) measured interval.
+
+    ``track`` names the display lane the exporters map to a Chrome
+    trace thread — ``"scheduler"``, ``"queue"``, ``"slot 3"``,
+    ``"trainer"`` — so Perfetto shows one swim-lane per decode slot and
+    one per subsystem.  ``args`` are the labels (slot id, prefix-hit
+    blocks, kernel mode, finish reason...).
+    """
+    name: str
+    cat: str                    # request | scheduler | engine | trainer
+    track: str
+    t0: float
+    t1: float = -1.0
+    args: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def dur(self) -> float:
+        """Wall seconds (0 for instants and still-open spans)."""
+        return max(self.t1 - self.t0, 0.0)
+
+
+class Tracer:
+    """Bounded span recorder; disabled instances still time spans.
+
+    One tracer instance is shared down a stack (engine → scheduler →
+    trainer phases) so a single export holds every track.  All methods
+    are cheap host-side operations — a disabled tracer costs two
+    ``perf_counter`` calls and one small object per ``span`` block, and
+    nothing at all for ``begin``/``end``/``instant``.
+    """
+
+    def __init__(self, capacity: int = 65536, enabled: bool = True,
+                 clock=time.perf_counter):
+        self.enabled = enabled
+        self.spans: deque[Span] = deque(maxlen=capacity)
+        self.dropped = 0          # spans evicted by the ring buffer
+        self._open: dict[object, Span] = {}
+        self._clock = clock
+
+    # ------------------------------------------------------------ record
+    def _record(self, span: Span) -> None:
+        if len(self.spans) == self.spans.maxlen:
+            self.dropped += 1
+        self.spans.append(span)
+
+    @contextmanager
+    def span(self, name: str, cat: str = "span", track: str | None = None,
+             **args):
+        """Measure the block; record it iff the tracer is enabled.
+
+        Always yields a ``Span`` whose ``dur`` is valid after the block
+        exits, so callers can feed stats from the same measurement that
+        lands in the trace.
+        """
+        sp = Span(name, cat, track or cat, self._clock(), args=args)
+        try:
+            yield sp
+        finally:
+            sp.t1 = self._clock()
+            if self.enabled:
+                self._record(sp)
+
+    def begin(self, key, name: str, cat: str = "span",
+              track: str | None = None, **args) -> None:
+        """Open a lifecycle span under ``key`` (no-op when disabled).
+        Re-opening a live key silently replaces the orphan."""
+        if not self.enabled:
+            return
+        self._open[key] = Span(name, cat, track or cat, self._clock(),
+                               args=args)
+
+    def end(self, key, **args) -> Span | None:
+        """Close and record the open span under ``key``, merging
+        ``args`` into its labels.  Unknown keys (tracer disabled at
+        ``begin`` time, or evicted bookkeeping) are ignored."""
+        sp = self._open.pop(key, None)
+        if sp is None:
+            return None
+        sp.t1 = self._clock()
+        sp.args.update(args)
+        self._record(sp)
+        return sp
+
+    def amend(self, key, **args) -> None:
+        """Merge labels into a still-open span (no-op if unknown)."""
+        sp = self._open.get(key)
+        if sp is not None:
+            sp.args.update(args)
+
+    def instant(self, name: str, cat: str = "event",
+                track: str | None = None, **args) -> None:
+        """Record a zero-duration marker (deferral, weight push)."""
+        if not self.enabled:
+            return
+        t = self._clock()
+        self._record(Span(name, cat, track or cat, t, t, args))
+
+    # ----------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self.spans)
+
+    @property
+    def n_open(self) -> int:
+        return len(self._open)
+
+    def snapshot(self) -> list[Span]:
+        """The recorded spans, oldest first (open spans excluded)."""
+        return list(self.spans)
+
+    def clear(self) -> None:
+        self.spans.clear()
+        self._open.clear()
+        self.dropped = 0

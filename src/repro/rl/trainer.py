@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +20,10 @@ from repro.analysis.guards import TraceGuard
 from repro.core import decoding
 from repro.core.dipo import dipo_loss
 from repro.core.trajectory import trajectory_logprobs
-from repro.optim import adamw
+from repro.obs import profile
+from repro.obs.metrics import MetricsRegistry
 from repro.rl.rewards import math_rewards
+from repro.optim import adamw
 from repro.serving.engine import RolloutEngine
 
 
@@ -57,6 +58,19 @@ class DiPOTrainer:
         self.ref_params = jax.tree.map(jnp.copy, params) \
             if rl_cfg.beta else None
         self.timings: list[dict] = []
+        # phase spans land on the engine's tracer (track "trainer", so
+        # one export shows rollout / reward / train / update intervals
+        # interleaved with the serving ticks they drive); aggregates go
+        # to the dirl_trainer metrics namespace
+        self.tracer = engine.tracer
+        self.metrics = MetricsRegistry("dirl_trainer")
+        self._phase_seconds = self.metrics.histogram(
+            "phase_seconds", "per-phase wall time per train step",
+            labelnames=("phase",))
+        self._steps_total = self.metrics.counter(
+            "steps", "train steps executed")
+        self._step_traces = self.metrics.gauge(
+            "step_traces", "compilations of the fused DiPO step")
         s_max = engine.gen_cfg.s_max
 
         def step_fn(params, opt_state, roll, ref_logp, n_groups):
@@ -95,52 +109,61 @@ class DiPOTrainer:
         # the group entry keeps each group's members adjacent, so a
         # paged + prefix-cache engine prefills and stores every unique
         # prompt once instead of G times (rng layout identical to the
-        # old np.repeat + generate_ids path — rollouts are unchanged)
-        t0 = time.perf_counter()
-        answers = np.repeat(prompt_batch.answers, G, axis=0)
-        rng, kr = jax.random.split(rng)
-        sampling = None
-        if cfg.group_taus:
-            # per-group τ: one SamplingParams per prompt, expanded to
-            # the group's G adjacent members by generate_group_ids
-            sampling = [self.engine.gen_cfg.sampling(
-                tau=cfg.group_taus[p % len(cfg.group_taus)])
-                for p in range(P)]
-        gen = self.engine.generate_group_ids(
-            prompt_batch.prompt_tokens, prompt_batch.prompt_blocks, kr, G,
-            sampling=sampling)
-        t_roll = time.perf_counter() - t0
+        # old np.repeat + generate_ids path — rollouts are unchanged).
+        # obs spans replace the old perf_counter pairs: same intervals,
+        # but they also land on the shared tracer (track "trainer") and
+        # aggregate into the dirl_trainer phase histogram.
+        with self.tracer.span("rollout", cat="trainer",
+                              track="trainer") as sp_roll:
+            answers = np.repeat(prompt_batch.answers, G, axis=0)
+            rng, kr = jax.random.split(rng)
+            sampling = None
+            if cfg.group_taus:
+                # per-group τ: one SamplingParams per prompt, expanded
+                # to the group's G adjacent members
+                sampling = [self.engine.gen_cfg.sampling(
+                    tau=cfg.group_taus[p % len(cfg.group_taus)])
+                    for p in range(P)]
+            gen = self.engine.generate_group_ids(
+                prompt_batch.prompt_tokens, prompt_batch.prompt_blocks,
+                kr, G, sampling=sampling)
 
         # ---- rewards ---------------------------------------------------
-        t0 = time.perf_counter()
-        rewards = math_rewards(self.engine.tok, gen, answers, bsz)
-        group = np.repeat(np.arange(P, dtype=np.int32), G)
-        roll = decoding.rollout_to_batch(
-            gen, jnp.asarray(rewards), jnp.asarray(group), bsz)
-        t_reward = time.perf_counter() - t0
+        with self.tracer.span("reward", cat="trainer",
+                              track="trainer") as sp_rew:
+            rewards = math_rewards(self.engine.tok, gen, answers, bsz)
+            group = np.repeat(np.arange(P, dtype=np.int32), G)
+            roll = decoding.rollout_to_batch(
+                gen, jnp.asarray(rewards), jnp.asarray(group), bsz)
 
         # ---- logits + policy update -----------------------------------
-        t0 = time.perf_counter()
-        ref_logp = None
-        if self.ref_params is not None:
-            ref_logp = jax.lax.stop_gradient(
-                self._ref_logp(self.ref_params, roll))
-        self.params, self.opt_state, metrics = self._step(
-            self.params, self.opt_state, roll, ref_logp, P)
-        # deliberate: t_train must measure the real step, and metrics
-        # are pulled to host right below anyway
-        jax.block_until_ready(metrics["loss"])  # dirlint: ok(hot-sync)
-        t_train = time.perf_counter() - t0
+        with self.tracer.span("train", cat="trainer",
+                              track="trainer") as sp_train:
+            ref_logp = None
+            if self.ref_params is not None:
+                ref_logp = jax.lax.stop_gradient(
+                    self._ref_logp(self.ref_params, roll))
+            with profile.annotate("dipo_step"):
+                self.params, self.opt_state, metrics = self._step(
+                    self.params, self.opt_state, roll, ref_logp, P)
+            # deliberate: t_train must measure the real step, and metrics
+            # are pulled to host right below anyway
+            jax.block_until_ready(metrics["loss"])  # dirlint: ok(hot-sync)
 
         # ---- in-place server update ------------------------------------
-        t0 = time.perf_counter()
-        self.engine.store.update_weights(self.params)
-        # offline stores pay the reload on the *next* rollout; in-place
-        # stores are done here.
-        t_update = time.perf_counter() - t0
+        with self.tracer.span("update", cat="trainer",
+                              track="trainer") as sp_upd:
+            self.engine.store.update_weights(self.params)
+            # offline stores pay the reload on the *next* rollout;
+            # in-place stores are done here.
 
-        timing = {"rollout_s": t_roll, "reward_s": t_reward,
-                  "train_s": t_train, "update_s": t_update}
+        timing = {"rollout_s": sp_roll.dur, "reward_s": sp_rew.dur,
+                  "train_s": sp_train.dur, "update_s": sp_upd.dur}
+        for phase in ("rollout", "reward", "train", "update"):
+            self._phase_seconds.labels(phase=phase).observe(
+                timing[f"{phase}_s"])
+        self._steps_total.inc()
+        self._step_traces.set(self._step.n_traces)
         if self.engine.last_call.get("batching") == "continuous":
             timing["rollout_util"] = self.engine.last_call["utilization"]
             timing["prefix_hit_rate"] = \

@@ -166,6 +166,9 @@ class GenerationConfig:
     sync_each_tick: bool = False  # block on device results inside the
     # generate call for honest per-call latency stats; off by default —
     # the sync serializes dispatch (dirlint: hot-sync)
+    trace: bool = False          # record obs.trace lifecycle/tick spans
+    # (host wall-clock around dispatch; never syncs the device)
+    trace_capacity: int = 65536  # span ring-buffer size (oldest evicted)
 
     def sampling(self, **overrides) -> SamplingParams:
         """The default per-request params this config implies."""

@@ -62,8 +62,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-from collections import deque
 from typing import Iterator, Sequence
 
 import jax
@@ -73,6 +71,8 @@ import numpy as np
 from repro.core import decoding
 from repro.data.tokenizer import ByteTokenizer
 from repro.data.pipeline import pad_to_block
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serving.api import (GenerationConfig, RequestOutput,
                                SamplingParams)
 from repro.serving.scheduler import Completion, SlotScheduler
@@ -83,6 +83,22 @@ __all__ = ["EngineStats", "GenerationConfig", "RequestOutput",
 
 @dataclasses.dataclass
 class EngineStats:
+    """Engine-level throughput/latency counters.
+
+    Like ``SchedulerStats``, every field is bound storage for an
+    instrument in ``self.registry`` (namespace ``dirl_engine``): hot
+    paths mutate attributes, exporters read ``registry.collect()``,
+    and the warmup reset ``engine.stats = EngineStats()`` resets the
+    exported view too.
+
+    ``wall_seconds`` covers *engine-side* wall time under one uniform
+    definition on every path: the time spent driving the pool plus
+    packaging completions, measured around jit dispatch (the
+    ``generate_ids`` call body; each ``stream()`` pool tick).  Consumer
+    wait between ``stream`` yields is excluded.  With
+    ``sync_each_tick`` the measured region includes a device sync, so
+    the same field reports honest device latency.
+    """
     rollouts: int = 0
     total_tokens: int = 0
     total_steps: int = 0          # denoise steps actually executed
@@ -106,10 +122,32 @@ class EngineStats:
     # across arbitrary per-request SamplingParams mixes
     advance_traces: int = 0
     # continuous: per-completion admit -> finish latency, in scheduler
-    # ticks (one tick = one block-advance over the pool).  Bounded: a
-    # long-lived server keeps the most recent window, not every request
-    latencies: deque = dataclasses.field(
-        default_factory=lambda: deque(maxlen=4096))
+    # ticks (one tick = one block-advance over the pool).  An
+    # obs.metrics.Histogram: cumulative count/sum plus a bounded
+    # reservoir window for percentiles — a long-lived server keeps the
+    # most recent 4096, not every request.  Deque-compatible (append /
+    # len / iter), so legacy call sites read/write it unchanged.
+    latencies: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(
+            "latency_ticks", "admit->finish latency in scheduler ticks",
+            reservoir=4096))
+
+    _COUNTER_FIELDS = ("rollouts", "total_tokens", "total_steps",
+                       "slot_ticks", "active_slot_ticks",
+                       "prefix_hit_blocks", "prefix_miss_blocks")
+    _GAUGE_FIELDS = ("wall_seconds", "transient_kv_bytes",
+                     "admit_transient_kv_bytes", "advance_traces")
+
+    def __post_init__(self):
+        self.registry = MetricsRegistry("dirl_engine")
+        for f in self._COUNTER_FIELDS:
+            self.registry.counter(f, bind=(self, f))
+        for f in self._GAUGE_FIELDS:
+            self.registry.gauge(f, bind=(self, f))
+        self.registry.info("kernel_mode",
+                           "paged-kernel execution mode",
+                           bind=(self, "kernel_mode"))
+        self.registry.adopt("latency_ticks", self.latencies)
 
     @property
     def tokens_per_step(self) -> float:
@@ -129,14 +167,18 @@ class EngineStats:
     @property
     def latency_p50(self) -> float:
         """Median admit -> finish latency in scheduler ticks."""
-        return float(np.percentile(list(self.latencies), 50)) \
-            if self.latencies else 0.0
+        return self.latencies.percentile(50)
 
     @property
     def latency_p95(self) -> float:
         """95th-percentile admit -> finish latency in scheduler ticks."""
-        return float(np.percentile(list(self.latencies), 95)) \
-            if self.latencies else 0.0
+        return self.latencies.percentile(95)
+
+    @property
+    def latency_p99(self) -> float:
+        """Tail (99th-percentile) admit -> finish latency in scheduler
+        ticks — the SLO-facing number (over the bounded recent window)."""
+        return self.latencies.percentile(99)
 
 
 class RolloutEngine:
@@ -147,6 +189,11 @@ class RolloutEngine:
         self.gen_cfg = gen_cfg
         self.tok = tokenizer or ByteTokenizer()
         self.stats = EngineStats()
+        # one tracer for the whole stack: handed to the scheduler so
+        # engine drains, tick phases and request lifecycles land in a
+        # single export (disabled by default — still used for timing)
+        self.tracer = Tracer(capacity=gen_cfg.trace_capacity,
+                             enabled=gen_cfg.trace)
         self.last_call: dict = {}
         self._pending: list[Completion] = []   # stream() completions
         # harvested while a generate_ids drain drove the shared pool
@@ -169,7 +216,8 @@ class RolloutEngine:
         is threaded exactly once.
         """
         if self._sched is None:
-            self._sched = SlotScheduler(self.model, self.gen_cfg)
+            self._sched = SlotScheduler(self.model, self.gen_cfg,
+                                        tracer=self.tracer)
             self.stats.transient_kv_bytes = \
                 self._sched.transient_kv_bytes
             self.stats.kernel_mode = self._sched.stats.kernel_mode
@@ -218,21 +266,27 @@ class RolloutEngine:
         returned dict matches the input; the static and continuous
         paths are token-identical for the same ``rng``.
         """
-        t0 = time.perf_counter()
-        params = self.store.params   # offline store pays a load here
-        B = prompt_tokens.shape[0]
-        plist, vec_kw = self._resolve_sampling(B, sampling, prompt_blocks)
-        if self.gen_cfg.batching == "static":
-            gen = self._gen_jit(params, jnp.asarray(prompt_tokens),
-                                jnp.asarray(prompt_blocks), rng, **vec_kw)
-            if self.gen_cfg.sync_each_tick:
-                # opt-in: honest wall-clock per call, at dispatch cost
-                jax.block_until_ready(gen["tokens"])  # dirlint: ok(hot-sync)
-            self.last_call = {"batching": "static"}
-        else:
-            gen = self._generate_ids_continuous(params, prompt_tokens,
-                                                prompt_blocks, rng, plist)
-        dt = time.perf_counter() - t0
+        # one obs span defines wall_seconds for the whole call on both
+        # paths (a disabled tracer still times; see EngineStats docs)
+        with self.tracer.span("generate_ids", cat="engine",
+                              track="engine",
+                              batching=self.gen_cfg.batching) as sp:
+            params = self.store.params  # offline store pays a load here
+            B = prompt_tokens.shape[0]
+            plist, vec_kw = self._resolve_sampling(B, sampling,
+                                                   prompt_blocks)
+            if self.gen_cfg.batching == "static":
+                gen = self._gen_jit(params, jnp.asarray(prompt_tokens),
+                                    jnp.asarray(prompt_blocks), rng,
+                                    **vec_kw)
+                if self.gen_cfg.sync_each_tick:
+                    # opt-in: honest wall-clock per call, at dispatch cost
+                    jax.block_until_ready(gen["tokens"])  # dirlint: ok(hot-sync)
+                self.last_call = {"batching": "static"}
+            else:
+                gen = self._generate_ids_continuous(
+                    params, prompt_tokens, prompt_blocks, rng, plist)
+        dt = sp.dur
         self.stats.rollouts += B
         # honest tokens/sec numerator: count only up to the first EOS
         # (each row's own stop token)
@@ -382,13 +436,17 @@ class RolloutEngine:
         while sched.has_work or self._pending:
             if sched.has_work:
                 p = self.store.params if live else params
-                t0 = time.perf_counter()
                 slot0 = sched.stats.slot_ticks
                 active0 = sched.stats.active_slot_ticks
                 hit0 = sched.stats.prefix_hit_blocks
                 miss0 = sched.stats.prefix_miss_blocks
-                self._pending.extend(sched.step(p))
-                self.stats.wall_seconds += time.perf_counter() - t0
+                # engine-side wall time: pool tick + (below) completion
+                # packaging; consumer wait between yields excluded —
+                # the same definition generate_ids uses
+                with self.tracer.span("stream_tick", cat="engine",
+                                      track="engine") as sp:
+                    self._pending.extend(sched.step(p))
+                self.stats.wall_seconds += sp.dur
                 self.stats.slot_ticks += sched.stats.slot_ticks - slot0
                 self.stats.active_slot_ticks += \
                     sched.stats.active_slot_ticks - active0
@@ -408,7 +466,12 @@ class RolloutEngine:
                 self.stats.total_tokens += comp.gen_tokens
                 self.stats.total_steps += comp.denoise_steps
                 self.stats.latencies.append(comp.latency_ticks)
-                yield self._to_output(comp)
+                with self.tracer.span("package", cat="engine",
+                                      track="engine",
+                                      uid=comp.uid) as psp:
+                    out = self._to_output(comp)
+                self.stats.wall_seconds += psp.dur
+                yield out
 
     def _to_output(self, comp: Completion) -> RequestOutput:
         """Package a raw completion into the structured streaming

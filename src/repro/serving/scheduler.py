@@ -157,6 +157,9 @@ import numpy as np
 from repro.analysis.guards import TraceGuard
 from repro.core import decoding
 from repro.models import attention
+from repro.obs import profile
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serving.api import GenerationConfig, Request, SamplingParams
 from repro.serving.prefix_cache import PrefixIndex, chain_keys
 
@@ -192,7 +195,18 @@ class Completion:
 
 @dataclasses.dataclass
 class SchedulerStats:
-    """Honest utilization counters (the fig6/serve_bench substrate)."""
+    """Honest utilization counters (the fig6/serve_bench substrate).
+
+    Every field doubles as the bound storage of an instrument in
+    ``self.registry`` (an ``obs.metrics.MetricsRegistry`` under the
+    ``dirl_scheduler`` namespace): the hot paths keep mutating plain
+    attributes (``stats.ticks += 1`` — one attribute write, no
+    instrument dispatch) while exporters read the same values through
+    ``registry.collect()``.  A fresh stats object — the established
+    warmup reset pattern ``sched.stats = SchedulerStats()`` — therefore
+    also resets the exported view, counters included (the
+    process-restart analogue that monotonic semantics permit).
+    """
     ticks: int = 0               # pool advance steps executed
     slot_ticks: int = 0          # ticks * n_slots (paid compute)
     active_slot_ticks: int = 0   # slot-ticks that advanced a live request
@@ -228,6 +242,29 @@ class SchedulerStats:
     shared_pages: int = 0        # peak pages referenced by >= 2 slots
     prefix_evictions: int = 0    # refcount-0 index entries LRU-reclaimed
 
+    # monotonic fields -> Counter; level/peak fields -> Gauge
+    _COUNTER_FIELDS = ("ticks", "slot_ticks", "active_slot_ticks",
+                       "admitted", "completed", "gen_tokens",
+                       "denoise_steps", "prefill_blocks", "deferred",
+                       "page_allocs", "page_frees", "prefix_hit_blocks",
+                       "prefix_miss_blocks", "prefix_evictions")
+    _GAUGE_FIELDS = ("peak_active", "transient_kv_bytes",
+                     "admit_transient_kv_bytes", "advance_traces",
+                     "peak_pages_in_use", "peak_pages_live",
+                     "shared_pages")
+
+    def __post_init__(self):
+        # non-field attribute: stays out of dataclasses.fields() and
+        # out of __eq__/__repr__, so stats comparisons are value-only
+        self.registry = MetricsRegistry("dirl_scheduler")
+        for f in self._COUNTER_FIELDS:
+            self.registry.counter(f, bind=(self, f))
+        for f in self._GAUGE_FIELDS:
+            self.registry.gauge(f, bind=(self, f))
+        self.registry.info("kernel_mode",
+                           "paged-kernel execution mode for this pool",
+                           bind=(self, "kernel_mode"))
+
     @property
     def utilization(self) -> float:
         """Fraction of paid slot-ticks that did useful work."""
@@ -251,11 +288,17 @@ class SlotScheduler:
     """
 
     def __init__(self, model, gen_cfg: GenerationConfig | None = None,
-                 **overrides):
+                 tracer: Tracer | None = None, **overrides):
         if gen_cfg is None:
             gen_cfg = GenerationConfig()
         if overrides:
             gen_cfg = dataclasses.replace(gen_cfg, **overrides)
+        # one tracer per stack: the engine passes its own so scheduler
+        # ticks and request lifecycles land in the same export; a
+        # standalone scheduler builds one from the config (disabled by
+        # default — a disabled tracer records nothing but still times)
+        self.tracer = tracer if tracer is not None else Tracer(
+            capacity=gen_cfg.trace_capacity, enabled=gen_cfg.trace)
         cfg = model.cfg
         n_slots, max_len = gen_cfg.n_slots, gen_cfg.max_len
         cache = gen_cfg.cache
@@ -318,6 +361,7 @@ class SlotScheduler:
             self.n_pages = 0
 
         self._queue: deque[Request] = deque()
+        self._admit_info: dict = {}   # labels of the latest admission
         self._slot_req: list[Request | None] = [None] * n_slots
         self._slot_admit_tick: list[int] = [0] * n_slots
         self._next_uid = 0
@@ -612,10 +656,14 @@ class SlotScheduler:
             self._slot_blk[slot] = pb
             self.stats.page_allocs += pb
             self.stats.prefill_blocks += pb
-            self._state = self._admit_jit(
-                params, self._state, jnp.int32(slot), req.prompt[None],
-                jnp.asarray([pb], jnp.int32), req.rng, jnp.int32(limit),
-                samp, jnp.asarray(pages, jnp.int32))
+            self._admit_info = {"path": "cold", "hit_blocks": 0,
+                                "new_pages": pb}
+            with profile.annotate("prefill"):
+                self._state = self._admit_jit(
+                    params, self._state, jnp.int32(slot),
+                    req.prompt[None], jnp.asarray([pb], jnp.int32),
+                    req.rng, jnp.int32(limit), samp,
+                    jnp.asarray(pages, jnp.int32))
             return True
 
         # the prefix index keys on prompt *content* only — sampling
@@ -657,18 +705,23 @@ class SlotScheduler:
                                          self.pages_live)
 
         table_row = jnp.asarray(self._table_host[slot], jnp.int32)
+        self._admit_info = {"hit_blocks": h, "new_pages": len(new_pages)}
         if h == 0:
             # cold prompt: the PR-2 path — one B=1 plain prefill,
             # scattered into the fresh pages (then registered above)
-            self._state = self._admit_jit(
-                params, self._state, jnp.int32(slot), req.prompt[None],
-                jnp.asarray([pb], jnp.int32), req.rng, jnp.int32(limit),
-                samp, jnp.asarray(new_pages, jnp.int32))
+            self._admit_info["path"] = "cold"
+            with profile.annotate("prefill"):
+                self._state = self._admit_jit(
+                    params, self._state, jnp.int32(slot),
+                    req.prompt[None], jnp.asarray([pb], jnp.int32),
+                    req.rng, jnp.int32(limit), samp,
+                    jnp.asarray(new_pages, jnp.int32))
             return True
         row = np.full((self.max_len,), cfg.resolved_mask_token, np.int32)
         row[:pb * bsz] = req.prompt
         if h == pb:
             # full hit (the DiPO G-group case): zero prefill
+            self._admit_info["path"] = "full_hit"
             self._state = self._admit_hit_jit(
                 self._state, jnp.int32(slot), jnp.asarray(row), req.rng,
                 jnp.int32(limit), table_row, jnp.int32(pb), samp)
@@ -676,11 +729,14 @@ class SlotScheduler:
             self.stats.admit_transient_kv_bytes = max(
                 self.stats.admit_transient_kv_bytes,
                 self._admit_transient_kv_bytes(h))
-            self._state = self._admit_suffix_jit(
-                params, self._state, jnp.int32(slot),
-                req.prompt[None, h * bsz:], jnp.asarray(row), req.rng,
-                jnp.int32(limit), jnp.asarray(hit_pages, jnp.int32),
-                jnp.asarray(new_pages, jnp.int32), table_row, samp)
+            self._admit_info["path"] = "suffix_prefill"
+            with profile.annotate("prefill_suffix"):
+                self._state = self._admit_suffix_jit(
+                    params, self._state, jnp.int32(slot),
+                    req.prompt[None, h * bsz:], jnp.asarray(row),
+                    req.rng, jnp.int32(limit),
+                    jnp.asarray(hit_pages, jnp.int32),
+                    jnp.asarray(new_pages, jnp.int32), table_row, samp)
         return True
 
     def _empty_completion(self, req: Request) -> Completion:
@@ -747,6 +803,11 @@ class SlotScheduler:
                                    prompt_blocks=prompt_blocks,
                                    rng=jnp.asarray(rng),
                                    params=params))
+        # lifecycle span 1/2: queued, closed at admission (or at the
+        # zero-budget short circuit) with the wait labeled
+        self.tracer.begin(("queued", uid), f"req {uid} queued",
+                          cat="request", track="queue", uid=uid,
+                          prompt_blocks=prompt_blocks)
         return uid
 
     @property
@@ -880,52 +941,88 @@ class SlotScheduler:
         ``params`` are the *model weights* (the per-request decode
         parameters ride on each submitted request).  Returns the
         completions harvested this tick (possibly empty).
+
+        Instrumentation: the tick and its three phases are recorded as
+        tracer spans on the ``scheduler`` track; admitted requests get
+        lifecycle spans on per-slot tracks.  All span timestamps are
+        host wall-clock around jit *dispatch* — the tracer never syncs
+        the device, so instrumentation cannot change tokens, retraces,
+        or the ``hot-sync`` contract (tests assert byte-parity and
+        ``n_advance_traces == 1`` with tracing on).
         """
         if isinstance(params, SamplingParams):
             raise TypeError(
                 "step(params=) takes model weights; per-request "
                 "SamplingParams belong on submit(..., params=...)")
+        with self.tracer.span("tick", cat="scheduler", track="scheduler",
+                              tick=self.stats.ticks):
+            return self._tick(params)
+
+    def _tick(self, params) -> list[Completion]:
         self.stats.transient_kv_bytes = self.transient_kv_bytes
         if not self.stats.kernel_mode and self.kernel_plan:
             self.stats.kernel_mode = self.kernel_plan.mode
         # ---- admit queued requests into free slots -------------------
         out: list[Completion] = []
-        for slot in range(self.n_slots):
-            if not self._queue or self._slot_req[slot] is not None:
-                continue
-            req = self._queue[0]
-            budget = self.n_blocks_total - req.prompt_blocks
-            if req.params.max_new_blocks is not None:
-                budget = min(budget, req.params.max_new_blocks)
-            if budget <= 0:
-                # nothing to decode (prompt fills the cache / zero block
-                # budget) — complete immediately, never touch a slot
+        with self.tracer.span("admit", cat="scheduler",
+                              track="scheduler") as adm:
+            n_adm = 0
+            for slot in range(self.n_slots):
+                if not self._queue or self._slot_req[slot] is not None:
+                    continue
+                req = self._queue[0]
+                budget = self.n_blocks_total - req.prompt_blocks
+                if req.params.max_new_blocks is not None:
+                    budget = min(budget, req.params.max_new_blocks)
+                if budget <= 0:
+                    # nothing to decode (prompt fills the cache / zero
+                    # block budget) — complete immediately, never touch
+                    # a slot
+                    self._queue.popleft()
+                    out.append(self._empty_completion(req))
+                    self.tracer.end(("queued", req.uid), outcome="empty")
+                    continue
+                limit = req.prompt_blocks + budget
+                if self.cache == "paged":
+                    if limit > self.n_usable_pages:
+                        raise ValueError(
+                            f"request {req.uid} needs {limit} pages but "
+                            f"the pool only has {self.n_usable_pages}")
+                    if not self._admit_paged(params, slot, req, budget):
+                        # out of pages: defer the FIFO head until
+                        # evictions free some (backpressure, not a crash)
+                        self.stats.deferred += 1
+                        self.tracer.instant("defer", cat="scheduler",
+                                            track="scheduler",
+                                            uid=req.uid,
+                                            queued=len(self._queue))
+                        break
+                else:
+                    self.stats.prefill_blocks += req.prompt_blocks
+                    self._admit_info = {"path": "dense", "hit_blocks": 0}
+                    with profile.annotate("prefill"):
+                        self._state = self._admit_jit(
+                            params, self._state, jnp.int32(slot),
+                            req.prompt[None],
+                            jnp.asarray([req.prompt_blocks], jnp.int32),
+                            req.rng, jnp.int32(limit),
+                            self._samp_scalars(req.params), None)
                 self._queue.popleft()
-                out.append(self._empty_completion(req))
-                continue
-            limit = req.prompt_blocks + budget
-            if self.cache == "paged":
-                if limit > self.n_usable_pages:
-                    raise ValueError(
-                        f"request {req.uid} needs {limit} pages but the "
-                        f"pool only has {self.n_usable_pages}")
-                if not self._admit_paged(params, slot, req, budget):
-                    # out of pages: defer the FIFO head until evictions
-                    # free some (backpressure, never a crash)
-                    self.stats.deferred += 1
-                    break
-            else:
-                self.stats.prefill_blocks += req.prompt_blocks
-                self._state = self._admit_jit(
-                    params, self._state, jnp.int32(slot),
-                    req.prompt[None],
-                    jnp.asarray([req.prompt_blocks], jnp.int32),
-                    req.rng, jnp.int32(limit),
-                    self._samp_scalars(req.params), None)
-            self._queue.popleft()
-            self._slot_req[slot] = req
-            self._slot_admit_tick[slot] = self.stats.ticks
-            self.stats.admitted += 1
+                self._slot_req[slot] = req
+                self._slot_admit_tick[slot] = self.stats.ticks
+                self.stats.admitted += 1
+                n_adm += 1
+                # lifecycle span 2/2: decode, one track per slot —
+                # closed at harvest with the finish labels
+                info = self._admit_info
+                self.tracer.end(("queued", req.uid), slot=slot, **info)
+                self.tracer.begin(
+                    ("decode", req.uid), f"req {req.uid}",
+                    cat="request", track=f"slot {slot}", uid=req.uid,
+                    slot=slot, kernel_mode=self.stats.kernel_mode,
+                    prompt_blocks=req.prompt_blocks, budget=budget,
+                    **info)
+            adm.args["admitted"] = n_adm
 
         self.stats.peak_active = max(self.stats.peak_active,
                                      self.n_active)
@@ -933,9 +1030,15 @@ class SlotScheduler:
             return out
 
         # ---- advance the whole pool by one block ---------------------
-        if self.cache == "paged":
-            self._alloc_cursor_pages()
-        self._state = self._advance(params, self._state)
+        # span brackets page allocation + jit dispatch; advance_block's
+        # result is left unsynced, so dur is dispatch time unless
+        # sync_each_tick (engine) or a profiler capture asks for more
+        with self.tracer.span("advance", cat="scheduler",
+                              track="scheduler", n_active=self.n_active):
+            if self.cache == "paged":
+                self._alloc_cursor_pages()
+            with profile.annotate("advance_block"):
+                self._state = self._advance(params, self._state)
         self.stats.advance_traces = self._advance.n_traces
         self.stats.ticks += 1
         self.stats.slot_ticks += self.n_slots
@@ -949,55 +1052,67 @@ class SlotScheduler:
                                                self._slot_limit[slot])
 
         # ---- evict finished slots ------------------------------------
-        done = np.asarray(self._state.done)
-        evicted: list[int] = []
-        freed_pages: list[int] = []
-        for slot in range(self.n_slots):
-            req = self._slot_req[slot]
-            if req is None or not done[slot]:
-                continue
-            tokens = np.asarray(self._state.tokens[slot])
-            steps = np.asarray(self._state.steps[slot])
-            gen_blocks = int(self._state.blk[slot]) - req.prompt_blocks
-            bsz = self.model.cfg.block_size
-            lo, hi = req.prompt_blocks * bsz, \
-                (req.prompt_blocks + gen_blocks) * bsz
-            # serve-stats count tokens up to and including the first
-            # EOS (the *request's* stop token): the rest of an EOS
-            # block is padding, not output
-            eos_id = req.params.eos_id
-            gen_tokens = int(decoding.count_gen_tokens(
-                tokens[None], [req.prompt_blocks], [gen_blocks],
-                eos_id=eos_id, block_size=bsz)[0])
-            hit_eos = bool((tokens[lo:hi] == eos_id).any())
-            comp = Completion(
-                uid=req.uid, tokens=tokens, steps=steps,
-                prompt_blocks=req.prompt_blocks, gen_blocks=gen_blocks,
-                gen_tokens=gen_tokens,
-                denoise_steps=int(self._state.n_denoise[slot]),
-                finish_reason="eos" if hit_eos else "length",
-                admitted_tick=self._slot_admit_tick[slot],
-                completed_tick=self.stats.ticks, params=req.params)
-            out.append(comp)
-            self._slot_req[slot] = None
-            evicted.append(slot)
-            if self.cache == "paged":
-                freed_pages.extend(self._free_slot_pages(slot))
-            self.stats.completed += 1
-            self.stats.gen_tokens += gen_tokens
-            self.stats.denoise_steps += comp.denoise_steps
-        if evicted and self.cache == "paged":
-            # reset the device table rows so the freed slots' idempotent
-            # re-commits dump into the null page, not into pages that
-            # may be re-allocated to other requests (shared prompt pages
-            # stay mapped in the *surviving* sharers' rows untouched)
-            table = self._state.table.at[
-                jnp.asarray(evicted, jnp.int32)].set(-1)
-            self._state = dataclasses.replace(self._state, table=table)
-            if freed_pages:
-                # exclusive pages only: wiping a still-shared page would
-                # blind the survivors to their own prompt
-                self._invalidate_pages(freed_pages)
+        with self.tracer.span("harvest", cat="scheduler",
+                              track="scheduler") as hv:
+            done = np.asarray(self._state.done)
+            evicted: list[int] = []
+            freed_pages: list[int] = []
+            for slot in range(self.n_slots):
+                req = self._slot_req[slot]
+                if req is None or not done[slot]:
+                    continue
+                tokens = np.asarray(self._state.tokens[slot])
+                steps = np.asarray(self._state.steps[slot])
+                gen_blocks = int(self._state.blk[slot]) \
+                    - req.prompt_blocks
+                bsz = self.model.cfg.block_size
+                lo, hi = req.prompt_blocks * bsz, \
+                    (req.prompt_blocks + gen_blocks) * bsz
+                # serve-stats count tokens up to and including the first
+                # EOS (the *request's* stop token): the rest of an EOS
+                # block is padding, not output
+                eos_id = req.params.eos_id
+                gen_tokens = int(decoding.count_gen_tokens(
+                    tokens[None], [req.prompt_blocks], [gen_blocks],
+                    eos_id=eos_id, block_size=bsz)[0])
+                hit_eos = bool((tokens[lo:hi] == eos_id).any())
+                comp = Completion(
+                    uid=req.uid, tokens=tokens, steps=steps,
+                    prompt_blocks=req.prompt_blocks,
+                    gen_blocks=gen_blocks, gen_tokens=gen_tokens,
+                    denoise_steps=int(self._state.n_denoise[slot]),
+                    finish_reason="eos" if hit_eos else "length",
+                    admitted_tick=self._slot_admit_tick[slot],
+                    completed_tick=self.stats.ticks, params=req.params)
+                out.append(comp)
+                self.tracer.end(("decode", req.uid),
+                                finish_reason=comp.finish_reason,
+                                gen_tokens=comp.gen_tokens,
+                                gen_blocks=comp.gen_blocks,
+                                denoise_steps=comp.denoise_steps,
+                                latency_ticks=comp.latency_ticks)
+                self._slot_req[slot] = None
+                evicted.append(slot)
+                if self.cache == "paged":
+                    freed_pages.extend(self._free_slot_pages(slot))
+                self.stats.completed += 1
+                self.stats.gen_tokens += gen_tokens
+                self.stats.denoise_steps += comp.denoise_steps
+            if evicted and self.cache == "paged":
+                # reset the device table rows so the freed slots'
+                # idempotent re-commits dump into the null page, not
+                # into pages that may be re-allocated to other requests
+                # (shared prompt pages stay mapped in the *surviving*
+                # sharers' rows untouched)
+                table = self._state.table.at[
+                    jnp.asarray(evicted, jnp.int32)].set(-1)
+                self._state = dataclasses.replace(self._state,
+                                                  table=table)
+                if freed_pages:
+                    # exclusive pages only: wiping a still-shared page
+                    # would blind the survivors to their own prompt
+                    self._invalidate_pages(freed_pages)
+            hv.args["completed"] = len(evicted)
         return out
 
     def run(self, params) -> Iterator[Completion]:

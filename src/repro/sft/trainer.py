@@ -3,8 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import Iterator
 
 import jax
@@ -12,6 +10,9 @@ import jax.numpy as jnp
 
 from repro.analysis.guards import TraceGuard
 from repro.core.block_diffusion import sft_loss
+from repro.obs import profile
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.optim import adamw
 
 
@@ -23,14 +24,34 @@ class SFTConfig:
 
 
 class SFTTrainer:
+    """Supervised trainer over the fused NELBO step.
+
+    Observability: each ``train_step`` is bracketed by an obs span
+    (track ``"trainer"``; shared with the serving stack when a caller
+    passes an engine's tracer via ``tracer=``), and step wall times
+    aggregate into the ``dirl_trainer`` metrics namespace.  The span
+    interval includes the deliberate post-step sync, so
+    ``step_seconds`` keeps measuring the real device step.
+    """
+
     def __init__(self, model, opt_cfg: adamw.AdamWConfig, params, *,
-                 layout: str = "dirl"):
+                 layout: str = "dirl", tracer: Tracer | None = None):
         self.model = model
         self.opt_cfg = opt_cfg
         self.params = params
         self.opt_state = adamw.init_state(opt_cfg, params)
         self.layout = layout
         self.step_seconds: list[float] = []
+        self.tracer = tracer if tracer is not None else Tracer(
+            enabled=False)
+        self.metrics = MetricsRegistry("dirl_trainer")
+        self._phase_seconds = self.metrics.histogram(
+            "phase_seconds", "per-phase wall time per train step",
+            labelnames=("phase",))
+        self._steps_total = self.metrics.counter(
+            "steps", "train steps executed")
+        self._step_traces = self.metrics.gauge(
+            "step_traces", "compilations of the fused SFT step")
 
         def step_fn(params, opt_state, batch, rng):
             def loss_fn(p):
@@ -47,14 +68,19 @@ class SFTTrainer:
                                 name="sft_step")
 
     def train_step(self, batch: dict, rng) -> dict:
-        t0 = time.perf_counter()
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        self.params, self.opt_state, metrics = self._step(
-            self.params, self.opt_state, batch, rng)
-        # deliberate: step_seconds must measure the real step, and
-        # metrics are pulled to host right below anyway
-        jax.block_until_ready(metrics["loss"])  # dirlint: ok(hot-sync)
-        self.step_seconds.append(time.perf_counter() - t0)
+        with self.tracer.span("sft_step", cat="trainer",
+                              track="trainer") as sp:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            with profile.annotate("sft_step"):
+                self.params, self.opt_state, metrics = self._step(
+                    self.params, self.opt_state, batch, rng)
+            # deliberate: step_seconds must measure the real step, and
+            # metrics are pulled to host right below anyway
+            jax.block_until_ready(metrics["loss"])  # dirlint: ok(hot-sync)
+        self.step_seconds.append(sp.dur)
+        self._phase_seconds.labels(phase="train").observe(sp.dur)
+        self._steps_total.inc()
+        self._step_traces.set(self._step.n_traces)
         out = {k: float(v) for k, v in metrics.items()}
         out["step_traces"] = self._step.n_traces
         return out

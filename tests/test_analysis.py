@@ -92,7 +92,7 @@ def _rules(findings):
 
 def test_rule_registry_complete():
     assert set(RULES) == {
-        "trace-branch", "trace-host-pull", "hot-sync",
+        "trace-branch", "trace-host-pull", "hot-sync", "obs-in-trace",
         "post-donation-read", "kernel-oob-index", "kernel-scratch-tile",
         "kernel-plan-matrix", "kernel-parity-coverage"}
     for rule in RULES.values():
@@ -148,6 +148,83 @@ def test_hot_sync_fires_in_hot_path(tmp_path):
     """})
     findings = trace_lint.run(project)
     assert _rules(findings) == {"hot-sync"}
+
+
+# ------------------------------------------------------- obs-in-trace
+
+_OBS_FIXTURE = {"obs/__init__.py": "", "obs/trace.py": """
+    class Tracer:
+        def span(self, name):
+            pass
+
+        def begin(self, key, name):
+            pass
+"""}
+
+
+def test_obs_in_trace_fires(tmp_path):
+    """Every detection route: `.tracer.<span-API>` chains, obs
+    constructors, and method calls on a locally bound obs handle."""
+    project = _project(tmp_path, {**_OBS_FIXTURE, "eng.py": """
+        import jax
+        from repro.obs.trace import Tracer
+
+        class Eng:
+            def hot(self, x):
+                with self.tracer.span("step"):
+                    return x * 2
+
+            def hot2(self, x):
+                t = Tracer()
+                t.begin("k", "n")
+                return x
+
+            def drive(self, x):
+                return jax.jit(self.hot)(x) + jax.jit(self.hot2)(x)
+    """})
+    findings = [f for f in trace_lint.run(project)
+                if f.rule == "obs-in-trace"]
+    assert len(findings) == 3
+    msgs = " ".join(f.message for f in findings)
+    assert "self.tracer.span" in msgs          # chain on conventional name
+    assert "repro.obs.trace.Tracer" in msgs    # constructor via from-import
+    assert "t.begin" in msgs                   # local obs handle
+
+
+def test_obs_host_side_is_clean(tmp_path):
+    """Obs calls *around* the dispatch — the scheduler pattern — stay
+    unflagged: only jit-reachable bodies are walked."""
+    project = _project(tmp_path, {**_OBS_FIXTURE, "sched.py": """
+        import jax
+        from repro.obs.trace import Tracer
+
+        class Sched:
+            def _kernel(self, x):
+                return x + 1
+
+            def step(self, x):
+                with self.tracer.span("tick"):
+                    return jax.jit(self._kernel)(x)
+    """})
+    assert "obs-in-trace" not in _rules(trace_lint.run(project))
+
+
+def test_obs_in_trace_pragma_suppresses(tmp_path):
+    src = textwrap.dedent("""
+        import jax
+
+        def hot(self, x):
+            self.tracer.begin("k", "n")  # dirlint: ok(obs-in-trace)
+            return x
+
+        step = jax.jit(hot)
+    """)
+    project = _project(tmp_path, {"mod.py": src})
+    findings = apply_pragmas(
+        trace_lint.run(project),
+        {str(tmp_path / "mod.py"): scan_pragmas(src)})
+    obs = [f for f in findings if f.rule == "obs-in-trace"]
+    assert len(obs) == 1 and obs[0].suppressed
 
 
 # ------------------------------------------------------- donation safety

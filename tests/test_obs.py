@@ -1,0 +1,315 @@
+"""Observability layer: metrics registry semantics, span tracer
+invariants, request-lifecycle completeness through the scheduler, and
+exporter schema validation — plus the two properties the layer must not
+break: token byte-parity and the zero-retrace contract with tracing on.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import BlockDiffLM
+from repro.obs import export
+from repro.obs.metrics import Counter, Histogram, MetricsRegistry
+from repro.obs.trace import Span, Tracer
+from repro.serving.engine import EngineStats
+from repro.serving.scheduler import SlotScheduler
+
+CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=128, block_size=8,
+                  attn_impl="structured")
+BSZ = CFG.block_size
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = BlockDiffLM(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (4, 16), 4, 100))
+    pblocks = np.array([2, 1, 2, 1], np.int32)
+    return model, params, prompt, pblocks
+
+
+# ========================================================== registry
+
+
+def test_counter_monotonic():
+    reg = MetricsRegistry("t")
+    c = reg.counter("ticks", "tick count")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_registry_reset_spares_counters():
+    reg = MetricsRegistry("t")
+    c = reg.counter("done")
+    g = reg.gauge("active")
+    h = reg.histogram("lat", reservoir=8)
+    c.inc(5)
+    g.set(3)
+    h.observe(1.0)
+    reg.reset()
+    assert c.value == 5          # monotonic: survives registry reset
+    assert g.value == 0
+    assert len(h) == 0 and h.count == 0
+
+
+def test_labeled_family():
+    reg = MetricsRegistry("t")
+    fam = reg.histogram("phase_seconds", labelnames=("phase",))
+    fam.labels(phase="rollout").observe(1.0)
+    fam.labels(phase="train").observe(2.0)
+    assert fam.labels(phase="rollout").count == 1
+    by_labels = {s.labels: s.value for s in reg.collect()}
+    assert by_labels[(("phase", "rollout"),)]["count"] == 1
+    assert by_labels[(("phase", "train"),)]["sum"] == 2.0
+
+
+def test_bind_storage_views_dataclass_field():
+    """The bind=(obj, attr) design: plain attribute mutation and the
+    registry see ONE value — the scheduler keeps writing
+    ``stats.ticks += 1`` and collect() reports it."""
+
+    class Box:
+        ticks = 0
+
+    box = Box()
+    reg = MetricsRegistry("t")
+    c = reg.counter("ticks", bind=(box, "ticks"))
+    box.ticks += 7
+    assert c.value == 7
+    c.inc(2)
+    assert box.ticks == 9
+    (s,) = reg.collect()
+    assert s.name == "t_ticks" and s.value == 9
+
+
+def test_histogram_bounded_reservoir_and_percentiles():
+    h = Histogram("lat", reservoir=100)
+    for v in range(1000):
+        h.observe(float(v))
+    assert len(h) == 100                      # bounded window
+    assert h.count == 1000 and h.sum == sum(range(1000))
+    assert h.maxlen == 100
+    # recent-window percentiles: values 900..999
+    assert h.percentile(50) == pytest.approx(949.5)
+    assert 990 <= h.percentile(99) <= 999
+    # deque-compatible legacy surface
+    h2 = Histogram("lat2", reservoir=4)
+    h2.append(1)
+    assert list(h2) == [1] and bool(h2)
+
+
+def test_engine_stats_latency_p99():
+    s = EngineStats()
+    for v in range(1, 101):
+        s.latencies.append(v)
+    assert s.latency_p50 == pytest.approx(50.5)
+    assert s.latency_p99 == pytest.approx(np.percentile(range(1, 101), 99))
+    names = {smp.name for smp in s.registry.collect()}
+    assert "dirl_engine_latency_ticks" in names
+
+
+# ============================================================ tracer
+
+
+def test_span_nesting_and_tracks():
+    tr = Tracer()
+    with tr.span("outer", cat="scheduler", track="scheduler"):
+        with tr.span("inner", cat="scheduler", track="scheduler"):
+            pass
+    inner, outer = tr.snapshot()              # inner closes first
+    assert inner.name == "inner" and outer.name == "outer"
+    assert outer.t0 <= inner.t0 and inner.t1 <= outer.t1
+
+
+def test_ring_eviction_counts_dropped():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    assert len(tr) == 4 and tr.dropped == 6
+    assert [sp.name for sp in tr.snapshot()] == ["e6", "e7", "e8", "e9"]
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_disabled_tracer_still_times():
+    """Engine wall-time comes from span durations, so a disabled
+    tracer must still measure — it just records nothing."""
+    tr = Tracer(enabled=False)
+    with tr.span("work") as sp:
+        sum(range(1000))
+    assert sp.dur > 0
+    assert len(tr) == 0
+    tr.begin("k", "lifecycle")
+    assert tr.end("k") is None and tr.n_open == 0
+
+
+def test_begin_end_lifecycle_merges_args():
+    tr = Tracer()
+    tr.begin(("req", 0), "req 0", cat="request", track="slot 0", uid=0)
+    tr.amend(("req", 0), slot=0)
+    sp = tr.end(("req", 0), finish_reason="eos")
+    assert sp.args == {"uid": 0, "slot": 0, "finish_reason": "eos"}
+    assert tr.end(("req", 0)) is None         # idempotent close
+
+
+# ==================================== scheduler lifecycle + parity
+
+
+def _drain(sched, prompt, pblocks, params, budget=3):
+    keys = jax.random.split(jax.random.PRNGKey(7), prompt.shape[0])
+    for i in range(prompt.shape[0]):
+        sched.submit(prompt[i], int(pblocks[i]), keys[i],
+                     max_new_blocks=budget)
+    return {c.uid % prompt.shape[0]: c for c in sched.run(params)}
+
+
+def test_lifecycle_completeness_under_deferral(setup):
+    """A page pool too small for concurrent admission defers requests;
+    every request must still end with a closed decode span carrying the
+    finish_reason / slot / prefix-hit / kernel-mode labels, and defer
+    markers must land on the scheduler track."""
+    model, params, prompt, pblocks = setup
+    K = MAX_LEN // BSZ
+    sched = SlotScheduler(model, n_slots=4, max_len=MAX_LEN, s_max=4,
+                          mode="dynamic", tau=0.6, temperature=1.0,
+                          eos_id=1, cache="paged", n_pages=2 * K + 1,
+                          kernel="pallas", trace=True)
+    comps = _drain(sched, prompt, pblocks, params)
+    assert len(comps) == 4
+    assert sched.stats.deferred > 0           # the pool did defer
+    assert sched.tracer.n_open == 0           # every lifecycle closed
+    spans = sched.tracer.snapshot()
+    names = {sp.name for sp in spans}
+    assert {"tick", "admit", "advance", "harvest", "defer"} <= names
+    decode = {sp.args["uid"]: sp for sp in spans
+              if sp.cat == "request" and sp.track.startswith("slot")}
+    assert sorted(decode) == [0, 1, 2, 3]
+    for sp in decode.values():
+        for label in ("finish_reason", "slot", "hit_blocks",
+                      "kernel_mode"):
+            assert label in sp.args, (sp.name, label)
+        assert sp.dur > 0
+    queued = [sp for sp in spans if sp.track == "queue"]
+    assert len(queued) == 4
+    defers = [sp for sp in spans if sp.name == "defer"]
+    assert all(sp.track == "scheduler" for sp in defers)
+
+
+def test_tracing_preserves_bytes_and_single_trace(setup):
+    """Tracing on vs off: token-identical completions and the advance
+    still traces exactly once — observability is free of semantic and
+    retrace cost."""
+    model, params, prompt, pblocks = setup
+    comps = {}
+    for traced in (False, True):
+        sched = SlotScheduler(model, n_slots=2, max_len=MAX_LEN, s_max=4,
+                              mode="dynamic", tau=0.6, temperature=1.0,
+                              eos_id=1, cache="paged", trace=traced)
+        _drain(sched, prompt, pblocks, params)       # warm
+        sched.stats = type(sched.stats)()
+        comps[traced] = _drain(sched, prompt, pblocks, params)
+        assert sched.n_advance_traces == 1, sched.n_advance_traces
+    for uid, c in comps[False].items():
+        t = comps[True][uid]
+        hi = (c.prompt_blocks + c.gen_blocks) * BSZ
+        assert c.gen_blocks == t.gen_blocks
+        np.testing.assert_array_equal(c.tokens[:hi], t.tokens[:hi])
+
+
+def test_stats_reset_gives_fresh_registry():
+    """The warmup idiom ``sched.stats = type(sched.stats)()`` must
+    produce a working registry bound to the NEW object."""
+    s1 = EngineStats()
+    s1.rollouts += 3
+    s2 = type(s1)()
+    assert s2.rollouts == 0
+    s2.rollouts += 1
+    by_name = {smp.name: smp.value for smp in s2.registry.collect()}
+    assert by_name["dirl_engine_rollouts"] == 1
+
+
+# ========================================================== exporters
+
+
+def _spans():
+    tr = Tracer(clock=iter(np.arange(1.0, 9.0, 0.5).tolist()).__next__)
+    with tr.span("tick", cat="scheduler", track="scheduler"):
+        with tr.span("advance", cat="scheduler", track="scheduler"):
+            pass
+    tr.begin(("d", 0), "req 0", cat="request", track="slot 0", uid=0)
+    tr.begin(("d", 1), "req 1", cat="request", track="slot 1", uid=1)
+    tr.end(("d", 0), finish_reason="eos")
+    tr.end(("d", 1), finish_reason="budget")
+    tr.instant("defer", cat="scheduler", track="scheduler")
+    return tr.snapshot()
+
+
+def test_chrome_trace_schema_and_slot_tracks(tmp_path):
+    path = tmp_path / "run.trace.json"
+    export.write_chrome_trace(path, _spans(), metadata={"tool": "test"})
+    payload = export.validate_chrome_trace(path)
+    events = payload["traceEvents"]
+    threads = {e["args"]["name"] for e in events
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"scheduler", "slot 0", "slot 1"} <= threads
+    complete = [e for e in events if e["ph"] == "X"]
+    assert all(isinstance(e["ts"], int) and e["dur"] >= 1
+               for e in complete)
+    reqs = {e["name"]: e for e in complete if e["cat"] == "request"}
+    assert reqs["req 0"]["args"]["finish_reason"] == "eos"
+    assert payload["otherData"]["schema_version"] == \
+        export.TRACE_SCHEMA_VERSION
+
+
+def test_chrome_trace_validation_rejects_corruption(tmp_path):
+    path = tmp_path / "bad.trace.json"
+    export.write_chrome_trace(path, _spans())
+    payload = json.loads(path.read_text())
+    payload["traceEvents"][1]["ph"] = "Q"
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ValueError):
+        export.validate_chrome_trace(path)
+
+
+def test_metrics_json_roundtrip(tmp_path):
+    s = EngineStats()
+    s.rollouts += 2
+    s.latencies.append(4)
+    path = tmp_path / "m.json"
+    export.write_metrics_json(path, s.registry)
+    payload = export.validate_metrics_json(path)
+    by_name = {m["name"]: m for m in payload["metrics"]}
+    assert by_name["dirl_engine_rollouts"]["value"] == 2
+    assert by_name["dirl_engine_latency_ticks"]["value"]["count"] == 1
+
+
+def test_prometheus_text(tmp_path):
+    reg = MetricsRegistry("dirl_test")
+    reg.counter("ticks", "tick count").inc(3)
+    reg.histogram("lat", reservoir=8).observe(2.0)
+    reg.info("kernel_mode", "exec mode").set("interpret")
+    text = export.prometheus_text(reg)
+    assert "# TYPE dirl_test_ticks counter" in text
+    assert "dirl_test_ticks 3" in text
+    assert "dirl_test_lat_count 1" in text
+    assert 'quantile="0.99"' in text
+    assert 'dirl_test_kernel_mode_info{value="interpret"} 1' in text
+
+
+def test_jsonl_dump(tmp_path):
+    path = tmp_path / "spans.jsonl"
+    n = export.write_jsonl(path, _spans())
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == n == 5
+    assert all({"name", "track", "t0", "t1", "dur", "args"} <= set(ln)
+               for ln in lines)
