@@ -39,9 +39,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (analysis_bench, fig6_breakdown, fig7_sizes,
-                   fig8_tau_sweep, kernel_bench, paged_attn_bench,
-                   serve_bench, table1_eval)
+    from . import (analysis_bench, async_rl_bench, fig6_breakdown,
+                   fig7_sizes, fig8_tau_sweep, kernel_bench,
+                   paged_attn_bench, serve_bench, table1_eval)
     from .common import validate_bench_json
 
     benches = {
@@ -53,11 +53,13 @@ def main() -> None:
         "table1_eval": table1_eval.run,
         "fig8_tau_sweep": fig8_tau_sweep.run,
         "serve_bench": serve_bench.run,
+        "async_rl_bench": async_rl_bench.run,
     }
     # suites that track a cross-PR trajectory artifact: suite short name
     # -> per-entry required keys, checked by --smoke after the run
     json_suites = {
         "paged_attn_bench": ("paged_attn", paged_attn_bench.ENTRY_KEYS),
+        "async_rl_bench": ("async_rl", async_rl_bench.ENTRY_KEYS),
     }
 
     only = args.only

@@ -84,6 +84,7 @@ import numpy as np
 
 from repro.data.math_tasks import sample_problem
 from repro.data.pipeline import pad_to_block
+from repro.obs.metrics import Histogram
 from repro.serving.api import SamplingParams
 from repro.serving.engine import (EngineStats, GenerationConfig,
                                   RolloutEngine)
@@ -353,12 +354,18 @@ def _mixed_params(model, params, toks, blocks, max_len):
             assert c.gen_blocks == h.gen_blocks
             hi = (c.prompt_blocks + c.gen_blocks) * cfg.block_size
             np.testing.assert_array_equal(c.tokens[:hi], h.tokens[:hi])
-    lat = np.array([c.latency_ticks for c in mixed.values()])
+    # quantiles through the obs Histogram — the same reservoir
+    # estimator the engine's latency gauges use, so the bench reports
+    # what a live deployment's metrics endpoint would
+    lat = Histogram("mixed_latency_ticks", "admit->finish latency",
+                    reservoir=4096)
+    for c in mixed.values():
+        lat.observe(c.latency_ticks)
     s = sched.stats
     return [f"mixed4,{n_req},{s.gen_tokens},{dt:.3f},"
             f"{s.gen_tokens / max(dt, 1e-9):.0f},{s.ticks},"
-            f"{np.percentile(lat, 50):.0f},{np.percentile(lat, 95):.0f},"
-            f"{np.percentile(lat, 99):.0f},{sched.n_advance_traces}",
+            f"{lat.percentile(50):.0f},{lat.percentile(95):.0f},"
+            f"{lat.percentile(99):.0f},{sched.n_advance_traces}",
             f"# trace artifact -> {trace_path}",
             f"# metrics artifact -> {metrics_path}"]
 

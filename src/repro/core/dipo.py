@@ -51,6 +51,10 @@ def dipo_loss(logp: jax.Array, roll: RolloutBatch, *,
 
     logp (B, L): current-policy per-token log-probs at their reveal steps.
     old_logp: behaviour policy; None -> online Eq. 7 (stop-gradient).
+      The async pipeline (`rl.pipeline`) supplies this from its replay
+      queue — behaviour log-probs sealed onto rollout groups that
+      crossed a weight-update boundary — making the ratio the exact
+      pi_theta/pi_theta_old off-policy correction for stale rollouts.
     ref_logp: fixed reference for the KL penalty (None -> no penalty).
     aggregate: "token" (Eq. 8 / DAPO) or "seq" (Eq. 6).
     Returns (scalar loss to *minimise*, metrics).

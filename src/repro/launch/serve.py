@@ -133,7 +133,8 @@ def main():
                 tag = f"tau={out.params.tau:g} " if mixed else ""
                 print(f"{prompts[uid]!r} -> {out.text!r}")
                 print(f"  [{uid}] {tag}finish={out.finish_reason} "
-                      f"latency={out.latency_ticks} ticks")
+                      f"latency={out.latency_ticks} ticks "
+                      f"v{out.param_version}")
         else:
             outs = engine.generate_texts(prompts, jax.random.PRNGKey(1),
                                          sampling=sampling)
@@ -165,7 +166,8 @@ def main():
     s = engine.stats
     line = (f"[engine] {s.rollouts} rollouts | {s.total_tokens} tokens | "
             f"{s.tokens_per_step:.2f} tokens/denoise-step | "
-            f"{s.total_tokens / max(s.wall_seconds, 1e-9):.0f} tok/s")
+            f"{s.total_tokens / max(s.wall_seconds, 1e-9):.0f} tok/s | "
+            f"weights v{s.param_version}")
     if args.batching == "continuous":
         line += (f" | slot-util {s.utilization:.0%}"
                  f" | latency p50 {s.latency_p50:.0f}"

@@ -7,6 +7,16 @@ same entry point takes --mesh single|multi and the full configs.
 
   PYTHONPATH=src python -m repro.launch.train --arch tiny --steps 50
   PYTHONPATH=src python -m repro.launch.train --arch sdar-8b --mesh single --dry-run
+
+With ``--rl-steps N`` the launcher continues into DiPO post-training on
+the SFT'd weights (the paper's stage 2): a ModelServer + RolloutEngine
+pair and the synchronous ``DiPOTrainer`` — or, with ``--async``, the
+overlapped ``rl.pipeline`` producer/consumer loop whose staleness
+window ``--staleness-k`` bounds how many updates a consumed rollout may
+lag (K=0 reproduces the sync loop bitwise).
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny --steps 50 \\
+      --rl-steps 10 --async --staleness-k 2
 """
 
 from __future__ import annotations
@@ -30,6 +40,20 @@ def main():
                     help="lower+compile only (see repro.launch.dryrun for "
                          "the full sweep)")
     ap.add_argument("--save", default=None)
+    # ---- DiPO post-training (stage 2) ----
+    ap.add_argument("--rl-steps", type=int, default=0,
+                    help="DiPO updates after SFT (0 = SFT only)")
+    ap.add_argument("--async", dest="async_rl", action="store_true",
+                    help="overlap rollout generation and DiPO updates "
+                         "(rl.pipeline producer/consumer loop)")
+    ap.add_argument("--staleness-k", type=int, default=1,
+                    help="async: max updates a consumed rollout may lag "
+                         "(0 = bitwise-equal to the sync loop)")
+    ap.add_argument("--group-size", type=int, default=4,
+                    help="DiPO rollouts per prompt (G)")
+    ap.add_argument("--rl-prompts", type=int, default=4,
+                    help="prompts per DiPO update (P)")
+    ap.add_argument("--rl-lr", type=float, default=1e-4)
     args = ap.parse_args()
 
     import os
@@ -105,6 +129,42 @@ def main():
                 print(f"[{i:4d}] loss={float(m['loss']):.4f} "
                       f"gnorm={float(m['grad_norm']):.3f} "
                       f"({time.perf_counter() - t0:.2f}s)")
+        if args.rl_steps:
+            from repro.rl.pipeline import AsyncDiPOTrainer
+            from repro.rl.trainer import DiPOConfig, DiPOTrainer
+            from repro.serving.engine import (GenerationConfig,
+                                              RolloutEngine)
+            from repro.serving.server import ModelServer
+
+            # the server holds its own copy: the DiPO step donates the
+            # trainer's buffers and pushes fresh ones each update
+            server = ModelServer(jax.tree.map(jnp.copy, params))
+            engine = RolloutEngine(model, server, GenerationConfig(
+                max_len=args.seq_len, s_max=4, mode="dynamic", tau=0.7,
+                temperature=1.0, cache="paged",
+                n_slots=max(args.rl_prompts * args.group_size // 2, 2)),
+                tokenizer=tok)
+            rl_cfg = DiPOConfig(group_size=args.group_size,
+                                logprob_scheme="packed")
+            rl_opt = adamw.AdamWConfig(lr=args.rl_lr)
+            rng, kr = jax.random.split(rng)
+            if args.async_rl:
+                tr = AsyncDiPOTrainer(model, engine, rl_opt, rl_cfg,
+                                      params,
+                                      staleness_k=args.staleness_k)
+                mode = f"async K={args.staleness_k}"
+            else:
+                tr = DiPOTrainer(model, engine, rl_opt, rl_cfg, params)
+                mode = "sync"
+            print(f"[rl] DiPO {mode}: {args.rl_steps} updates, "
+                  f"P={args.rl_prompts} G={args.group_size}")
+            hist = tr.run(ds.prompt_batches(args.rl_prompts),
+                          args.rl_steps, kr)
+            params = tr.params
+            print(f"[rl] done: server v{server.version}, final "
+                  f"acc={hist[-1]['acc']:.3f} "
+                  f"reward={hist[-1]['reward_mean']:.3f}")
+
         if args.save:
             save_pytree(args.save, params)
             print(f"saved {args.save}")

@@ -1,0 +1,34 @@
+"""Async RL post-training pipeline (paper §4.2, Fig. 5b taken online).
+
+Runs rollout generation and DiPO updates as overlapping stages instead
+of the synchronous rollout↔update alternation of ``rl.trainer``:
+
+``replay``    version-tagged replay queue — a bounded FIFO of rollout
+              groups, each stamped with the ``ModelServer`` param
+              version that produced it, with staleness accounting and
+              discard / importance-correct policies beyond K versions.
+``producer``  async rollout producer — drives the engine's ``submit`` /
+              ``stream_completions`` surface so group rollouts stream
+              into the queue while the slot pool stays full (prefix-
+              cache prompt dedupe included).
+``loop``      bounded-staleness consumer — the DiPO step consumes from
+              the queue with per-group importance weights
+              ``pi_theta / pi_theta_old`` from the stored rollout
+              log-probs, and lands ``ModelServer.update_weights`` at
+              block boundaries *without draining the pool*: in-flight
+              requests finish their current block on the old params and
+              pick the new ones up at the next ``advance_block`` (the
+              per-block version record rides on each ``Completion``).
+
+``staleness_k=0`` degenerates to fully serial production/consumption
+and reproduces ``DiPOTrainer``'s parameter updates **bitwise** (tests/
+test_async_rl.py) — correctness stays machine-checkable while K>=1
+buys the wall-clock overlap.
+"""
+
+from repro.rl.pipeline.loop import AsyncDiPOTrainer
+from repro.rl.pipeline.producer import RolloutProducer
+from repro.rl.pipeline.replay import ReplayQueue, RolloutGroup
+
+__all__ = ["AsyncDiPOTrainer", "ReplayQueue", "RolloutGroup",
+           "RolloutProducer"]

@@ -1,0 +1,173 @@
+"""Version-tagged replay queue for async DiPO.
+
+A bounded FIFO of :class:`RolloutGroup` records — one entry per DiPO
+prompt group (the G rollouts whose relative rewards define the
+advantages).  Every group is stamped with the ``ModelServer`` param
+version that produced it, so the consumer can account staleness
+*exactly*: ``staleness = consumer_version - group.version``.
+
+Beyond the staleness window K the queue applies one of two policies:
+
+``"importance"``  keep the group; the consumer corrects with the
+                  explicit ratio ``exp(logp - old_logp)`` built from
+                  the behaviour log-probs *sealed* onto the group at
+                  the last version boundary it crossed while queued
+                  (``core.dipo.dipo_loss(old_logp=...)`` — Eq. 6 with
+                  pi_old = the stale rollout policy).
+``"discard"``     drop the group at pop time (counted in the
+                  ``groups_discarded`` counter) — the conservative
+                  on-policy-ish variant that trades samples for bias.
+
+Capacity is a *soft* bound enforced by the producer (it stops admitting
+new prompt batches while ``full``); ``push`` itself always accepts, so
+rollouts already in flight in the slot pool can always land.
+
+Observability: queue depth / peak-depth gauges, produced / consumed /
+discarded counters and a consumption-staleness histogram, all in the
+shared ``dirl_pipeline`` metrics namespace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
+
+
+@dataclasses.dataclass
+class RolloutGroup:
+    """One completed DiPO prompt group, queue-ready.
+
+    ``gen`` holds the raw per-member rollout arrays in the layout
+    ``decoding.rollout_to_batch`` consumes (host numpy; rows = the G
+    group members in submission order): ``tokens``/``steps`` (G, L),
+    ``prompt_blocks``/``gen_blocks``/``denoise_steps`` (G,), ``done``
+    (G,).  ``old_logp`` are the behaviour policy's per-token log-probs
+    (G, L) under the params tagged by ``version``.  They start out None
+    and are *sealed* lazily (``RolloutProducer.seal_queued``) only when
+    the group is still queued at a version boundary — a group consumed
+    within its harvest window keeps None forever, because its ratio is
+    identically 1 and the consumer realises Eq. 7 for it via the fused
+    step's ``fresh`` mask, with no behaviour forward ever paid.
+    """
+    prompt_id: int               # global production index (FIFO order)
+    gen: dict
+    rewards: np.ndarray          # (G,) float32 verifiable rewards
+    version: int                 # server version at harvest (the tag)
+    version_min: int             # min over members' per-block versions
+    version_max: int             # max over members' per-block versions
+    old_logp: np.ndarray | None = None
+
+    @property
+    def group_size(self) -> int:
+        return int(self.gen["tokens"].shape[0])
+
+    def staleness(self, current_version: int) -> int:
+        return current_version - self.version
+
+
+class ReplayQueue:
+    """Bounded FIFO of rollout groups with staleness accounting."""
+
+    def __init__(self, capacity: int, staleness_k: int,
+                 policy: str = "importance",
+                 registry: MetricsRegistry | None = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if staleness_k < 0:
+            raise ValueError(
+                f"staleness_k must be >= 0, got {staleness_k}")
+        if policy not in ("importance", "discard"):
+            raise ValueError(
+                f"policy must be importance|discard, got {policy!r}")
+        self.capacity = capacity
+        self.staleness_k = staleness_k
+        self.policy = policy
+        self._q: deque[RolloutGroup] = deque()
+        self.registry = registry if registry is not None \
+            else MetricsRegistry("dirl_pipeline")
+        self._depth = self.registry.gauge(
+            "queue_depth", "rollout groups waiting in the replay queue")
+        self._peak = self.registry.gauge(
+            "queue_peak_depth", "max replay-queue depth observed")
+        self._produced = self.registry.counter(
+            "groups_produced", "rollout groups pushed by the producer")
+        self._consumed = self.registry.counter(
+            "groups_consumed", "rollout groups consumed by DiPO steps")
+        self._discarded = self.registry.counter(
+            "groups_discarded",
+            "groups dropped for exceeding the staleness window")
+        self._staleness = self.registry.histogram(
+            "staleness", "consumer_version - group.version at pop")
+        self._sealed = self.registry.counter(
+            "groups_sealed",
+            "groups whose behaviour log-probs were sealed at a "
+            "version boundary")
+
+    # ---------------------------------------------------------- state
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        """Producer backpressure signal (push itself never refuses)."""
+        return len(self._q) >= self.capacity
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def groups(self) -> list[RolloutGroup]:
+        """Snapshot of queued groups in FIFO order (for sealing)."""
+        return list(self._q)
+
+    # ------------------------------------------------------------ ops
+    def push(self, group: RolloutGroup) -> None:
+        self._q.append(group)
+        self._produced.inc()
+        self._depth.set(len(self._q))
+        self._peak.max(len(self._q))
+
+    def n_ready(self, current_version: int) -> int:
+        """Groups a pop at ``current_version`` would deliver (i.e. the
+        queue depth minus heads the discard policy would evict)."""
+        if self.policy != "discard":
+            return len(self._q)
+        return sum(g.staleness(current_version) <= self.staleness_k
+                   for g in self._q)
+
+    def pop_batch(self, n: int, current_version: int
+                  ) -> list[RolloutGroup]:
+        """Pop ``n`` groups in FIFO order, applying the beyond-K policy.
+
+        Under ``"discard"`` over-stale heads are evicted (counted) and
+        never returned; under ``"importance"`` every group is
+        consumable — the stored behaviour log-probs make the update
+        correct at any recorded staleness.  Raises if fewer than ``n``
+        eligible groups are queued (the consumer is expected to pump
+        the producer until ``n_ready``).
+        """
+        out: list[RolloutGroup] = []
+        while len(out) < n:
+            if not self._q:
+                raise RuntimeError(
+                    f"replay queue exhausted: wanted {n} groups, got "
+                    f"{len(out)} (pump the producer before popping)")
+            g = self._q.popleft()
+            stale = g.staleness(current_version)
+            if stale < 0:
+                raise RuntimeError(
+                    f"group {g.prompt_id} tagged version {g.version} > "
+                    f"consumer version {current_version} — version "
+                    "bookkeeping corrupted")
+            if self.policy == "discard" and stale > self.staleness_k:
+                self._discarded.inc()
+                continue
+            self._staleness.observe(stale)
+            self._consumed.inc()
+            out.append(g)
+        self._depth.set(len(self._q))
+        return out

@@ -44,6 +44,58 @@ class DiPOConfig:
     group_taus: tuple[float, ...] | None = None
 
 
+def make_dipo_step(model, opt_cfg: adamw.AdamWConfig, rl_cfg: DiPOConfig,
+                   s_max: int) -> TraceGuard:
+    """Build the fused, donating DiPO update step.
+
+    One definition serves both the synchronous ``DiPOTrainer`` and the
+    async ``rl.pipeline`` consumer, so the two paths compile the *same*
+    jaxpr — the substrate of the pipeline's K=0 bitwise-equivalence
+    contract.  ``old_logp`` is the behaviour policy's per-token
+    log-probs: ``None`` selects the online Eq. 7 stop-gradient variant
+    (fresh on-policy rollouts); an array selects the explicit Eq. 6
+    importance ratio ``exp(logp - old_logp)`` — the off-policy
+    correction bounded-staleness consumption relies on.  ``fresh`` is a
+    per-row bool mask accompanying an ``old_logp`` array: True rows
+    were rolled out under the *current* params, so their behaviour IS
+    the current policy and the stored value is replaced with
+    ``stop_gradient(logp)`` — exactly Eq. 7 for that row, at zero
+    extra forwards.  A mixed batch (some rows sealed with stored
+    behaviour, some fresh) therefore needs only ONE executable, and the
+    common all-fresh case never pays a behaviour forward at all.
+    Versions never enter the traced computation (staleness is host-side
+    bookkeeping; ``old_logp``/``fresh`` are plain per-row data), so
+    mixed-version batches reuse one compiled executable — ``n_traces``
+    witnesses it.
+    """
+    def step_fn(params, opt_state, roll, old_logp, fresh, ref_logp,
+                n_groups):
+        def loss_fn(p):
+            logp = trajectory_logprobs(
+                model, p, roll, s_max=s_max,
+                scheme=rl_cfg.logprob_scheme)
+            ol = old_logp
+            if ol is not None and fresh is not None:
+                ol = jnp.where(fresh[:, None],
+                               jax.lax.stop_gradient(logp), ol)
+            return dipo_loss(
+                logp, roll, old_logp=ol, ref_logp=ref_logp,
+                n_groups=n_groups, eps=rl_cfg.eps, beta=rl_cfg.beta,
+                aggregate=rl_cfg.aggregate,
+                normalize_std=rl_cfg.normalize_std)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    # TraceGuard preserves step_fn's signature (functools.wraps),
+    # so static_argnames still resolves n_groups when it is passed
+    # positionally; n_traces witnesses one compile per n_groups
+    return TraceGuard(step_fn, donate_argnums=(0, 1),
+                      static_argnames=("n_groups",), name="dipo_step")
+
+
 class DiPOTrainer:
     def __init__(self, model, engine: RolloutEngine,
                  opt_cfg: adamw.AdamWConfig, rl_cfg: DiPOConfig, params):
@@ -72,29 +124,10 @@ class DiPOTrainer:
         self._step_traces = self.metrics.gauge(
             "step_traces", "compilations of the fused DiPO step")
         s_max = engine.gen_cfg.s_max
-
-        def step_fn(params, opt_state, roll, ref_logp, n_groups):
-            def loss_fn(p):
-                logp = trajectory_logprobs(
-                    model, p, roll, s_max=s_max,
-                    scheme=rl_cfg.logprob_scheme)
-                return dipo_loss(
-                    logp, roll, ref_logp=ref_logp, n_groups=n_groups,
-                    eps=rl_cfg.eps, beta=rl_cfg.beta,
-                    aggregate=rl_cfg.aggregate,
-                    normalize_std=rl_cfg.normalize_std)
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
-            params, opt_state, om = adamw.apply_updates(
-                opt_cfg, params, grads, opt_state)
-            return params, opt_state, {**metrics, **om, "loss": loss}
-
-        # TraceGuard preserves step_fn's signature (functools.wraps),
-        # so static_argnames still resolves n_groups when it is passed
-        # positionally; n_traces witnesses one compile per n_groups
-        self._step = TraceGuard(step_fn, donate_argnums=(0, 1),
-                                static_argnames=("n_groups",),
-                                name="dipo_step")
+        # the same fused step the async pipeline consumer runs (always
+        # called with old_logp=None here: fresh rollouts every step are
+        # exactly on-policy — Eq. 7)
+        self._step = make_dipo_step(model, opt_cfg, rl_cfg, s_max)
         self._ref_logp = jax.jit(functools.partial(
             trajectory_logprobs, model, s_max=s_max,
             scheme=rl_cfg.logprob_scheme))
@@ -145,7 +178,8 @@ class DiPOTrainer:
                     self._ref_logp(self.ref_params, roll))
             with profile.annotate("dipo_step"):
                 self.params, self.opt_state, metrics = self._step(
-                    self.params, self.opt_state, roll, ref_logp, P)
+                    self.params, self.opt_state, roll, None, None,
+                    ref_logp, P)
             # deliberate: t_train must measure the real step, and metrics
             # are pulled to host right below anyway
             jax.block_until_ready(metrics["loss"])  # dirlint: ok(hot-sync)

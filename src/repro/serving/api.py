@@ -119,6 +119,13 @@ class RequestOutput:
     pool block-steps); queue wait before admission — e.g. page-pool
     backpressure deferrals — is *not* included (``admitted_tick`` is
     stamped when the request enters a slot, not when it was submitted).
+
+    ``param_version`` is the model-weight version (``ModelServer.
+    version``) live when the request was admitted.  Under the async RL
+    loop weights are pushed between pool ticks, so a long response may
+    finish on newer weights than it started on; the admission version is
+    the request's staleness tag (the per-block record rides on the raw
+    ``Completion``).
     """
     uid: int
     text: str                    # decoded, trimmed at the first EOS
@@ -131,6 +138,7 @@ class RequestOutput:
     admitted_tick: int           # scheduler tick the request entered
     completed_tick: int          # scheduler tick it finished
     params: SamplingParams = SamplingParams()
+    param_version: int = 0       # weight version live at admission
 
     @property
     def latency_ticks(self) -> int:

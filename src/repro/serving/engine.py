@@ -121,6 +121,10 @@ class EngineStats:
     # (TraceGuard mirror) — the zero-retrace contract keeps this at 1
     # across arbitrary per-request SamplingParams mixes
     advance_traces: int = 0
+    # weight version (ModelServer.version) most recently read from the
+    # store while driving the pool — the in-place update observability
+    # hook: a push mid-stream moves this gauge at the next tick
+    param_version: int = 0
     # continuous: per-completion admit -> finish latency, in scheduler
     # ticks (one tick = one block-advance over the pool).  An
     # obs.metrics.Histogram: cumulative count/sum plus a bounded
@@ -136,7 +140,8 @@ class EngineStats:
                        "slot_ticks", "active_slot_ticks",
                        "prefix_hit_blocks", "prefix_miss_blocks")
     _GAUGE_FIELDS = ("wall_seconds", "transient_kv_bytes",
-                     "admit_transient_kv_bytes", "advance_traces")
+                     "admit_transient_kv_bytes", "advance_traces",
+                     "param_version")
 
     def __post_init__(self):
         self.registry = MetricsRegistry("dirl_engine")
@@ -271,6 +276,7 @@ class RolloutEngine:
         with self.tracer.span("generate_ids", cat="engine",
                               track="engine",
                               batching=self.gen_cfg.batching) as sp:
+            self.stats.param_version = getattr(self.store, "version", 0)
             params = self.store.params  # offline store pays a load here
             B = prompt_tokens.shape[0]
             plist, vec_kw = self._resolve_sampling(B, sampling,
@@ -355,9 +361,10 @@ class RolloutEngine:
             sched.stats.active_slot_ticks
         hit0, miss0 = sched.stats.prefix_hit_blocks, \
             sched.stats.prefix_miss_blocks
+        version = getattr(self.store, "version", 0)
         n_done = 0
         while n_done < B:
-            for comp in sched.step(params):
+            for comp in sched.step(params, param_version=version):
                 row = uid_to_row.pop(comp.uid, None)
                 if row is None:
                     # a streaming request finished mid-drain: hold it
@@ -419,13 +426,18 @@ class RolloutEngine:
             self._rng, rng = jax.random.split(self._rng)
         return self.scheduler.submit(toks, blocks, rng, params=params)
 
-    def stream(self, params=None) -> Iterator[RequestOutput]:
-        """Drive the pool until it drains, yielding ``RequestOutput``
-        records in completion order — new ``submit``s may land
+    def stream_completions(self, params=None) -> Iterator[Completion]:
+        """Drive the pool until it drains, yielding raw ``Completion``
+        records (full tokens + reveal-step map + per-block weight
+        versions) in completion order — new ``submit``s may land
         mid-stream.
 
-        With ``params=None`` the live store weights are re-read every
-        tick, so in-place server updates take effect mid-stream."""
+        With ``params=None`` the live store weights (and their version)
+        are re-read every tick, so in-place server updates take effect
+        at the next block boundary with the pool still full — the
+        drain-free weight push the async RL producer rides on.  Text
+        front ends want ``stream()``, which packages each completion
+        into a ``RequestOutput``."""
         if isinstance(params, SamplingParams):
             raise TypeError(
                 "stream(params=) takes model weights; per-request "
@@ -435,17 +447,20 @@ class RolloutEngine:
         live = params is None
         while sched.has_work or self._pending:
             if sched.has_work:
+                version = getattr(self.store, "version", 0)
                 p = self.store.params if live else params
+                self.stats.param_version = version
                 slot0 = sched.stats.slot_ticks
                 active0 = sched.stats.active_slot_ticks
                 hit0 = sched.stats.prefix_hit_blocks
                 miss0 = sched.stats.prefix_miss_blocks
-                # engine-side wall time: pool tick + (below) completion
+                # engine-side wall time: pool tick + (stream) completion
                 # packaging; consumer wait between yields excluded —
                 # the same definition generate_ids uses
                 with self.tracer.span("stream_tick", cat="engine",
                                       track="engine") as sp:
-                    self._pending.extend(sched.step(p))
+                    self._pending.extend(
+                        sched.step(p, param_version=version))
                 self.stats.wall_seconds += sp.dur
                 self.stats.slot_ticks += sched.stats.slot_ticks - slot0
                 self.stats.active_slot_ticks += \
@@ -457,6 +472,7 @@ class RolloutEngine:
                 self.stats.admit_transient_kv_bytes = max(
                     self.stats.admit_transient_kv_bytes,
                     sched.stats.admit_transient_kv_bytes)
+                self.stats.advance_traces = sched.n_advance_traces
             # pop-one/yield-one: if the consumer abandons the generator
             # mid-iteration, undelivered completions stay in _pending
             # for the next stream() call
@@ -466,12 +482,21 @@ class RolloutEngine:
                 self.stats.total_tokens += comp.gen_tokens
                 self.stats.total_steps += comp.denoise_steps
                 self.stats.latencies.append(comp.latency_ticks)
-                with self.tracer.span("package", cat="engine",
-                                      track="engine",
-                                      uid=comp.uid) as psp:
-                    out = self._to_output(comp)
-                self.stats.wall_seconds += psp.dur
-                yield out
+                yield comp
+
+    def stream(self, params=None) -> Iterator[RequestOutput]:
+        """Drive the pool until it drains, yielding ``RequestOutput``
+        records in completion order — new ``submit``s may land
+        mid-stream.
+
+        With ``params=None`` the live store weights are re-read every
+        tick, so in-place server updates take effect mid-stream."""
+        for comp in self.stream_completions(params):
+            with self.tracer.span("package", cat="engine",
+                                  track="engine", uid=comp.uid) as psp:
+                out = self._to_output(comp)
+            self.stats.wall_seconds += psp.dur
+            yield out
 
     def _to_output(self, comp: Completion) -> RequestOutput:
         """Package a raw completion into the structured streaming
@@ -487,7 +512,8 @@ class RolloutEngine:
             gen_blocks=comp.gen_blocks, gen_tokens=comp.gen_tokens,
             denoise_steps=comp.denoise_steps,
             admitted_tick=comp.admitted_tick,
-            completed_tick=comp.completed_tick, params=comp.params)
+            completed_tick=comp.completed_tick, params=comp.params,
+            param_version=comp.param_version)
 
     @staticmethod
     def _trim_ids(ids: np.ndarray, eos_id: int) -> np.ndarray:

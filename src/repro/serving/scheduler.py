@@ -182,6 +182,15 @@ class Completion:
     admitted_tick: int
     completed_tick: int
     params: SamplingParams = SamplingParams()
+    # model-weight version (ModelServer.version) live when the request
+    # entered its slot — the staleness tag async RL consumes
+    param_version: int = 0
+    # per-generated-block weight version (len == gen_blocks): a weight
+    # push lands between ticks, so an in-flight request finishes its
+    # current block on the old params and picks the new ones up at the
+    # next advance — this is the per-block record of that handoff
+    block_versions: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
 
     @property
     def finished_eos(self) -> bool:
@@ -364,6 +373,16 @@ class SlotScheduler:
         self._admit_info: dict = {}   # labels of the latest admission
         self._slot_req: list[Request | None] = [None] * n_slots
         self._slot_admit_tick: list[int] = [0] * n_slots
+        # model-weight versioning (async RL provenance): the version
+        # passed to step() is stamped per slot at admission and appended
+        # per advance, so a harvest can reconstruct exactly which
+        # weights produced each generated block.  One int per pool
+        # advance (one model forward), indexed by an absolute counter so
+        # the `sched.stats = SchedulerStats()` warmup reset cannot skew
+        # it — negligible memory even for very long-lived pools.
+        self._slot_admit_version: list[int] = [0] * n_slots
+        self._slot_admit_abs: list[int] = [0] * n_slots
+        self._tick_versions: list[int] = []
         self._next_uid = 0
         self._state = self._init_pool()
         # pool-static (cache layout + kernel choice fix it at
@@ -739,7 +758,8 @@ class SlotScheduler:
                     jnp.asarray(new_pages, jnp.int32), table_row, samp)
         return True
 
-    def _empty_completion(self, req: Request) -> Completion:
+    def _empty_completion(self, req: Request,
+                          param_version: int = 0) -> Completion:
         """Zero-budget request: completes without ever touching a slot.
 
         The record is explicitly all-prompt: tokens beyond the true
@@ -760,7 +780,8 @@ class SlotScheduler:
             prompt_blocks=req.prompt_blocks, gen_blocks=0,
             gen_tokens=0, denoise_steps=0, finish_reason="length",
             admitted_tick=self.stats.ticks,
-            completed_tick=self.stats.ticks, params=req.params)
+            completed_tick=self.stats.ticks, params=req.params,
+            param_version=param_version)
 
     # ------------------------------------------------------------- API
     def submit(self, prompt: np.ndarray, prompt_blocks: int, rng=None, *,
@@ -935,11 +956,17 @@ class SlotScheduler:
         self._state = dataclasses.replace(self._state, caches=caches)
 
     # ------------------------------------------------------------ tick
-    def step(self, params) -> list[Completion]:
+    def step(self, params, param_version: int = 0) -> list[Completion]:
         """One scheduler tick: admit -> advance -> evict.
 
         ``params`` are the *model weights* (the per-request decode
-        parameters ride on each submitted request).  Returns the
+        parameters ride on each submitted request); ``param_version`` is
+        their monotone version tag (``ModelServer.version``) — stamped
+        onto admissions and onto every block this tick commits, so
+        completions carry exact per-block weight provenance.  Weights
+        (and their version) may change between ticks without retracing:
+        that block boundary is precisely where the async RL loop lands
+        ``update_weights`` without draining the pool.  Returns the
         completions harvested this tick (possibly empty).
 
         Instrumentation: the tick and its three phases are recorded as
@@ -956,9 +983,9 @@ class SlotScheduler:
                 "SamplingParams belong on submit(..., params=...)")
         with self.tracer.span("tick", cat="scheduler", track="scheduler",
                               tick=self.stats.ticks):
-            return self._tick(params)
+            return self._tick(params, param_version)
 
-    def _tick(self, params) -> list[Completion]:
+    def _tick(self, params, param_version: int = 0) -> list[Completion]:
         self.stats.transient_kv_bytes = self.transient_kv_bytes
         if not self.stats.kernel_mode and self.kernel_plan:
             self.stats.kernel_mode = self.kernel_plan.mode
@@ -979,7 +1006,7 @@ class SlotScheduler:
                     # block budget) — complete immediately, never touch
                     # a slot
                     self._queue.popleft()
-                    out.append(self._empty_completion(req))
+                    out.append(self._empty_completion(req, param_version))
                     self.tracer.end(("queued", req.uid), outcome="empty")
                     continue
                 limit = req.prompt_blocks + budget
@@ -1010,6 +1037,8 @@ class SlotScheduler:
                 self._queue.popleft()
                 self._slot_req[slot] = req
                 self._slot_admit_tick[slot] = self.stats.ticks
+                self._slot_admit_version[slot] = param_version
+                self._slot_admit_abs[slot] = len(self._tick_versions)
                 self.stats.admitted += 1
                 n_adm += 1
                 # lifecycle span 2/2: decode, one track per slot —
@@ -1039,6 +1068,8 @@ class SlotScheduler:
                 self._alloc_cursor_pages()
             with profile.annotate("advance_block"):
                 self._state = self._advance(params, self._state)
+        # every live slot committed one block under these weights
+        self._tick_versions.append(param_version)
         self.stats.advance_traces = self._advance.n_traces
         self.stats.ticks += 1
         self.stats.slot_ticks += self.n_slots
@@ -1076,6 +1107,10 @@ class SlotScheduler:
                     tokens[None], [req.prompt_blocks], [gen_blocks],
                     eos_id=eos_id, block_size=bsz)[0])
                 hit_eos = bool((tokens[lo:hi] == eos_id).any())
+                # a live slot advances on every tick from admission to
+                # harvest, so its gen blocks map one-to-one onto the
+                # tick-version records starting at its admission point
+                a0 = self._slot_admit_abs[slot]
                 comp = Completion(
                     uid=req.uid, tokens=tokens, steps=steps,
                     prompt_blocks=req.prompt_blocks,
@@ -1083,7 +1118,11 @@ class SlotScheduler:
                     denoise_steps=int(self._state.n_denoise[slot]),
                     finish_reason="eos" if hit_eos else "length",
                     admitted_tick=self._slot_admit_tick[slot],
-                    completed_tick=self.stats.ticks, params=req.params)
+                    completed_tick=self.stats.ticks, params=req.params,
+                    param_version=self._slot_admit_version[slot],
+                    block_versions=np.asarray(
+                        self._tick_versions[a0:a0 + gen_blocks],
+                        np.int64))
                 out.append(comp)
                 self.tracer.end(("decode", req.uid),
                                 finish_reason=comp.finish_reason,

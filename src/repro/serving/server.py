@@ -21,6 +21,18 @@ import jax
 from repro.checkpoint.io import load_pytree, save_pytree
 
 
+class StaleParamsError(RuntimeError):
+    """A consumer asked for a param version the server no longer holds.
+
+    ``update_weights`` donates the superseded buffers (and the trainer's
+    next step donates the live ones it handed over), so a reference to
+    an old version is not merely outdated — reading it can raise
+    jax's "Array has been deleted" or silently alias fresh data.  The
+    versioned read surface turns that latent hazard into this loud,
+    named error at the *request* site instead.
+    """
+
+
 class ModelServer:
     """Keeps the live param pytree + a monotonically increasing version."""
 
@@ -34,11 +46,42 @@ class ModelServer:
     def params(self):
         return self._params
 
-    def update_weights(self, new_params) -> int:
+    def params_versioned(self) -> tuple[int, Any]:
+        """One atomic read of ``(version, params)``.
+
+        The pair is what a tick-granular consumer (the async rollout
+        producer) must take together: reading ``.params`` and
+        ``.version`` separately races with an ``update_weights`` landing
+        in between, mis-stamping a whole block of rollouts.
+        """
+        return self.version, self._params
+
+    def params_at(self, version: int):
+        """Version-pinned read: the live params iff ``version`` is
+        current, else ``StaleParamsError``.
+
+        The server keeps exactly one version — older buffers were
+        donated away — so a consumer that cached a version tag across an
+        update cannot get the matching weights back; failing loudly here
+        beats a post-donation read deep inside a jitted call.
+        """
+        if version != self.version:
+            raise StaleParamsError(
+                f"params version {version} requested but the server "
+                f"holds only version {self.version}; older buffers were "
+                "donated by update_weights — re-read params_versioned() "
+                "instead of caching params across updates")
+        return self._params
+
+    def update_weights(self, new_params, *, sync: bool = True) -> int:
         """In-place push (the LMDeploy update API analogue).
 
         With donation the old buffers are released as the new ones land;
-        there is no serialisation and no reload.
+        there is no serialisation and no reload.  ``sync=False`` skips
+        the readiness barrier: the version advances immediately and the
+        new buffers are consumed through normal jax dataflow — the async
+        RL loop uses this so a weight push never stalls the host between
+        two pool ticks (``update_seconds`` then measures dispatch only).
         """
         t0 = time.perf_counter()
         if self.donate:
@@ -47,8 +90,9 @@ class ModelServer:
             del old
         else:
             self._params = jax.tree.map(lambda x: x, new_params)
-        jax.block_until_ready(
-            jax.tree_util.tree_leaves(self._params)[0])
+        if sync:
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(self._params)[0])
         self.update_seconds = time.perf_counter() - t0
         self.version += 1
         return self.version

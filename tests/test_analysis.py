@@ -265,6 +265,55 @@ def test_post_donation_rebind_is_safe(tmp_path):
     assert donation.run(project) == []
 
 
+def test_post_donation_consumer_loop_wraparound_fires(tmp_path):
+    """The async RL consumer hazard (rl/pipeline/loop.py): the fused
+    DiPO step donates the param buffers the weight server still shares,
+    so a loop body that pushes the step *output* but forgets to rebind
+    its own ``params`` re-reads a dead buffer on the next iteration.
+    This is the static face of the runtime guard
+    ``ModelServer.params_at`` (StaleParamsError)."""
+    project = _project(tmp_path, {"loop.py": """
+        import jax
+
+        def _step(params, opt_state, batch):
+            return params, opt_state, {}
+
+        step = jax.jit(_step, donate_argnums=(0, 1))
+
+        def consume(server, params, opt_state, batches):
+            for batch in batches:
+                new_params, opt_state, m = step(params, opt_state, batch)
+                server.update_weights(new_params)
+            return new_params
+    """})
+    findings = donation.run(project)
+    assert _rules(findings) == {"post-donation-read"}
+    (f,) = findings
+    assert "params" in f.message and "step" in f.message
+
+
+def test_post_donation_consumer_rebind_and_push_is_safe(tmp_path):
+    """The canonical consumer shape: rebind params from the step output
+    in the call statement, push, and re-read live weights through the
+    server's versioned surface — no dead-buffer read anywhere."""
+    project = _project(tmp_path, {"loop.py": """
+        import jax
+
+        def _step(params, opt_state, batch):
+            return params, opt_state, {}
+
+        step = jax.jit(_step, donate_argnums=(0, 1))
+
+        def consume(server, params, opt_state, batches):
+            for batch in batches:
+                params, opt_state, m = step(params, opt_state, batch)
+                server.update_weights(params)
+                version, live = server.params_versioned()
+            return params
+    """})
+    assert donation.run(project) == []
+
+
 # ------------------------------------------------------- kernel contracts
 
 

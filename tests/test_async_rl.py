@@ -1,0 +1,268 @@
+"""Async RL pipeline: staleness accounting, K=0 bitwise equivalence
+with the synchronous trainer, importance-weighted off-policy updates,
+and the zero-retrace contract across mixed-version batches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decoding
+from repro.core.dipo import dipo_loss
+from repro.core.trajectory import RolloutBatch
+from repro.data.pipeline import MathTaskDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.config import ModelConfig
+from repro.models.model import BlockDiffLM
+from repro.optim.adamw import AdamWConfig
+from repro.rl.pipeline import AsyncDiPOTrainer, ReplayQueue, RolloutGroup
+from repro.rl.trainer import DiPOConfig, DiPOTrainer
+from repro.serving.engine import GenerationConfig, RolloutEngine
+from repro.serving.server import ModelServer, StaleParamsError
+
+CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=384, block_size=8,
+                  attn_impl="structured")
+BSZ = CFG.block_size
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = BlockDiffLM(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = ByteTokenizer()
+    return model, params, tok
+
+
+def _stack(model, params, tok):
+    server = ModelServer(jax.tree.map(jnp.copy, params))
+    engine = RolloutEngine(model, server, GenerationConfig(
+        max_len=MAX_LEN, s_max=4, n_slots=4, cache="paged",
+        temperature=1.0, tau=0.7), tokenizer=tok)
+    return server, engine
+
+
+def _ds(tok):
+    return MathTaskDataset(tok, BSZ, seq_len=MAX_LEN, seed=0, level=0)
+
+
+# ------------------------------------------------------- replay queue
+
+
+def _mk_group(pid, version, G=2, L=2 * BSZ):
+    gen = {"tokens": np.full((G, L), pid, np.int32),
+           "steps": np.zeros((G, L), np.int32),
+           "gen_blocks": np.ones((G,), np.int32),
+           "prompt_blocks": np.ones((G,), np.int32),
+           "done": np.ones((G,), bool),
+           "denoise_steps": np.ones((G,), np.int32)}
+    return RolloutGroup(prompt_id=pid, gen=gen,
+                        rewards=np.zeros((G,), np.float32),
+                        version=version, version_min=version,
+                        version_max=version)
+
+
+def test_discard_policy_evicts_beyond_window():
+    """Groups older than K versions are evicted (and counted) at pop
+    time under the discard policy; fresh ones flow through FIFO."""
+    q = ReplayQueue(capacity=8, staleness_k=1, policy="discard")
+    for pid, v in enumerate([0, 0, 1, 2]):
+        q.push(_mk_group(pid, v))
+    assert q.depth == 4
+    assert q.n_ready(current_version=2) == 2   # staleness 2,2,1,0
+    got = q.pop_batch(2, current_version=2)
+    assert [g.prompt_id for g in got] == [2, 3]
+    assert q.registry.get("groups_discarded").value == 2
+    assert q.registry.get("groups_consumed").value == 2
+    assert q.depth == 0
+    with pytest.raises(RuntimeError, match="exhausted"):
+        q.pop_batch(1, current_version=2)
+
+
+def test_importance_policy_keeps_stale_groups():
+    """The importance policy never evicts — stale groups are consumed
+    (their stored behaviour log-probs correct the update) and their
+    staleness lands in the histogram."""
+    q = ReplayQueue(capacity=8, staleness_k=1, policy="importance")
+    for pid, v in enumerate([0, 0, 1, 2]):
+        q.push(_mk_group(pid, v))
+    assert q.n_ready(current_version=2) == 4
+    got = q.pop_batch(4, current_version=2)
+    assert [g.prompt_id for g in got] == [0, 1, 2, 3]
+    assert [g.staleness(2) for g in got] == [2, 2, 1, 0]
+    hist = q.registry.get("staleness")
+    assert hist.count == 4 and max(hist) == 2
+    assert q.registry.get("groups_discarded").value == 0
+
+
+def test_future_version_tag_is_an_error():
+    q = ReplayQueue(capacity=4, staleness_k=0)
+    q.push(_mk_group(0, version=3))
+    with pytest.raises(RuntimeError, match="corrupted"):
+        q.pop_batch(1, current_version=2)
+
+
+# ------------------------------------------- versioned server surface
+
+
+def test_params_at_raises_on_stale_version(setup):
+    """`params_at` is the post-donation read guard: after an update the
+    old version's buffers were donated, so asking for them must fail
+    loudly instead of returning garbage."""
+    _, params, _ = setup
+    server = ModelServer(jax.tree.map(jnp.copy, params))
+    v0, p0 = server.params_versioned()
+    assert server.params_at(v0) is p0
+    new = jax.tree.map(jnp.copy, p0)
+    v1 = server.update_weights(new)
+    assert v1 == v0 + 1
+    assert server.params_at(v1) is not None
+    with pytest.raises(StaleParamsError, match="donated"):
+        server.params_at(v0)
+
+
+# --------------------------------------------- K=0 bitwise equivalence
+
+
+def test_k0_bitwise_matches_sync_trainer(setup, monkeypatch):
+    """staleness_k=0 reproduces DiPOTrainer parameter updates bitwise
+    over 3 steps — same rollout tokens, same params, same opt state —
+    even though the async path runs through submit/stream/queue."""
+    model, params, tok = setup
+    captured = []
+    orig = decoding.rollout_to_batch
+
+    def spy(gen, rewards, group, block_size):
+        captured.append(np.asarray(gen["tokens"]))
+        return orig(gen, rewards, group, block_size)
+
+    monkeypatch.setattr(decoding, "rollout_to_batch", spy)
+
+    opt = AdamWConfig(lr=1e-3)
+    rl = DiPOConfig(group_size=2, logprob_scheme="packed")
+
+    s1, e1 = _stack(model, params, tok)
+    tr = DiPOTrainer(model, e1, opt, rl, jax.tree.map(jnp.copy, params))
+    h1 = tr.run(_ds(tok).prompt_batches(2), 3, jax.random.PRNGKey(7),
+                verbose=False)
+    sync_rolls, captured = captured[:], []
+
+    s2, e2 = _stack(model, params, tok)
+    atr = AsyncDiPOTrainer(model, e2, opt, rl,
+                           jax.tree.map(jnp.copy, params), staleness_k=0)
+    h2 = atr.run(_ds(tok).prompt_batches(2), 3, jax.random.PRNGKey(7),
+                 verbose=False)
+    async_rolls = captured
+
+    # rollouts bitwise identical, step by step
+    assert len(sync_rolls) == len(async_rolls) == 3
+    for a, b in zip(sync_rolls, async_rolls):
+        np.testing.assert_array_equal(a, b)
+    # parameter and optimizer trajectories bitwise identical
+    for a, b in zip(jax.tree_util.tree_leaves(tr.params),
+                    jax.tree_util.tree_leaves(atr.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(tr.opt_state),
+                    jax.tree_util.tree_leaves(atr.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [h["loss"] for h in h1] == [h["loss"] for h in h2]
+    assert s1.version == s2.version == 3
+    # K=0 consumption is exactly on-policy: zero recorded staleness
+    assert all(h["staleness_max"] == 0 for h in h2)
+
+
+# --------------------------------------- importance weights, two versions
+
+
+def test_two_version_importance_weights_hand_computed():
+    """One group, two members rolled out under different param versions:
+    the stored behaviour log-probs produce the exact Eq. 6 ratios.
+
+    Row 0 (fresh, version v):   old_logp == logp      -> ratio 1
+    Row 1 (stale, version v-1): old_logp = log(0.1),
+                                logp = log(0.2)       -> ratio 2
+
+    rewards [1, 0] -> adv [+0.5, -0.5]; eps = 0.2, token aggregation,
+    all L=4 positions generated and valid:
+      surr row0 = min(1*0.5, 1*0.5)        = +0.5 per token
+      surr row1 = min(2*-0.5, 1.2*-0.5)    = -1.0 per token (pessimistic)
+      obj  = (4*0.5 - 4*1.0) / 8 = -0.25 -> loss = +0.25
+      ratio_mean = (4*1 + 4*2) / 8 = 1.5; clip_frac = 4/8 = 0.5
+    """
+    B, L = 2, 4
+    roll = RolloutBatch(
+        tokens=jnp.zeros((B, L), jnp.int32),
+        steps=jnp.zeros((B, L), jnp.int32),
+        prompt_mask=jnp.zeros((B, L), bool),
+        valid=jnp.ones((B, L), bool),
+        rewards=jnp.asarray([1.0, 0.0]), group=jnp.zeros((B,), jnp.int32))
+    logp = jnp.log(jnp.full((B, L), 0.2))
+    old_logp = jnp.stack([jnp.log(jnp.full((L,), 0.2)),
+                          jnp.log(jnp.full((L,), 0.1))])
+    loss, m = dipo_loss(logp, roll, old_logp=old_logp, n_groups=1,
+                        eps=0.2, aggregate="token")
+    np.testing.assert_allclose(float(loss), 0.25, rtol=1e-5)
+    np.testing.assert_allclose(float(m["ratio_mean"]), 1.5, rtol=1e-5)
+    np.testing.assert_allclose(float(m["clip_frac"]), 0.5, rtol=1e-6)
+
+
+# ----------------------------------------------- lazy boundary sealing
+
+
+def test_seal_backlog_at_version_boundary(setup):
+    """Behaviour log-probs are computed only for groups that cross a
+    version boundary while queued: None at harvest, sealed (once) by
+    ``seal_queued`` under the still-live harvest-window params, and a
+    loud error if a group ever survives a boundary unsealed."""
+    from repro.rl.pipeline import RolloutProducer
+
+    model, params, tok = setup
+    server, engine = _stack(model, params, tok)
+    q = ReplayQueue(capacity=8, staleness_k=1, policy="importance")
+    rl = DiPOConfig(group_size=2, logprob_scheme="packed")
+    prod = RolloutProducer(engine, q, rl, _ds(tok).prompt_batches(1),
+                          jax.random.PRNGKey(0))
+    prod.submit_next()
+    while q.depth < 1:
+        assert prod.pump() == 1
+    (g,) = q.groups()
+    assert g.old_logp is None          # lazy: nothing paid at harvest
+    assert prod.seal_queued() == 1
+    assert g.old_logp is not None and g.old_logp.shape == (2, MAX_LEN)
+    assert np.all(np.isfinite(g.old_logp))
+    assert q.registry.get("groups_sealed").value == 1
+    assert prod.seal_queued() == 0     # idempotent: already sealed
+    # an unsealed group whose harvest version is gone is an error, not
+    # a silently-wrong ratio
+    q.push(_mk_group(99, version=server.version))
+    server.update_weights(jax.tree.map(jnp.copy, server.params))
+    with pytest.raises(RuntimeError, match="never sealed"):
+        prod.seal_queued()
+
+
+# --------------------------------------------- zero-retrace contract
+
+
+def test_zero_retrace_across_mixed_version_batches(setup):
+    """K=1 consumption spans param versions (admission tags move every
+    update, old_logp rides as data) yet the fused step compiles exactly
+    once — versions never enter the traced computation."""
+    model, params, tok = setup
+    opt = AdamWConfig(lr=1e-3)
+    rl = DiPOConfig(group_size=2, logprob_scheme="packed")
+    server, engine = _stack(model, params, tok)
+    atr = AsyncDiPOTrainer(model, engine, opt, rl,
+                           jax.tree.map(jnp.copy, params), staleness_k=1)
+    h = atr.run(_ds(tok).prompt_batches(2), 4, jax.random.PRNGKey(3),
+                verbose=False)
+    assert server.version == 4
+    # consumption crossed versions 0..4 with stored behaviour logps…
+    assert sorted(hh["param_version"] for hh in h) == [1, 2, 3, 4]
+    assert all(np.isfinite(hh["loss"]) for hh in h)
+    # …and the fused step traced exactly once (its per-call gauge too)
+    assert atr._step.n_traces == 1
+    assert all(hh["step_traces"] == 1 for hh in h)
+    # the pool's advance never retraced either (drain-free weight
+    # pushes swap buffers between ticks, not shapes)
+    assert engine.scheduler.n_advance_traces == 1
