@@ -58,6 +58,7 @@ def main() -> None:
     # suites that track a cross-PR trajectory artifact: suite short name
     # -> per-entry required keys, checked by --smoke after the run
     json_suites = {
+        "kernel_bench": ("block_diff_attn", kernel_bench.ENTRY_KEYS),
         "paged_attn_bench": ("paged_attn", paged_attn_bench.ENTRY_KEYS),
         "async_rl_bench": ("async_rl", async_rl_bench.ENTRY_KEYS),
     }

@@ -9,6 +9,14 @@ resolve the full (interpret, pad) matrix to its documented modes, and
 the masking contract (null pages, ``pos = -1`` holes, ``cache_limit``,
 sliding window, MLA) must stay pinned by parity tests.
 
+The differentiable training kernel gets the same treatment: the
+``block_diff_attention`` matrix (aligned/subtile × compiled/interpret)
+is driven *through ``jax.grad``*, so one capture records the
+lse-emitting forward plus both backward launches (dQ, dKV) and their
+BlockSpecs/scratch are bounds- and tile-checked like any other launch;
+``kernel-parity-coverage`` additionally requires the gradient-parity
+grid in ``tests/test_kernels.py`` to keep the VJP pinned vs autodiff.
+
 None of this needs a TPU.  ``capture_launches`` monkeypatches
 ``pl.pallas_call`` on the shared pallas module (both kernel files bind
 it via ``from jax.experimental import pallas as pl``, so the attribute
@@ -316,40 +324,89 @@ def _check_paged_kernel(make_args, label: str) -> list[Finding]:
     return findings
 
 
+# (shape kind, interpret, require_tile): the aligned shape uses the
+# production 128-tiles (scratch must hold the (8, 128) tile), the
+# subtile shape exercises the clamped small-tile path trainers/tests
+# run on CPU; both are checked compiled AND interpret — capture never
+# lowers, so the compiled specs are checkable on a CPU host
+_BLOCK_DIFF_MATRIX = [
+    ("aligned", True, True),
+    ("aligned", False, True),
+    ("subtile", True, False),
+    ("subtile", False, False),
+]
+
+# every kernel body the differentiable attention must launch: the
+# (lse-emitting) forward plus the dQ / dKV backward pair
+_BLOCK_DIFF_KERNELS = ("_kernel", "_dq_kernel", "_dkv_kernel")
+
+
+def _block_diff_args(*, aligned: bool):
+    if aligned:
+        B, L, H, Hkv, D, Dv, t = 1, 256, 2, 1, 128, 128, 128
+    else:
+        B, L, H, Hkv, D, Dv, t = 1, 64, 4, 2, 32, 24, 16
+    args = (
+        jnp.zeros((B, L, H, D), jnp.float32),
+        jnp.zeros((B, L, Hkv, D), jnp.float32),
+        jnp.zeros((B, L, Hkv, Dv), jnp.float32),
+        jnp.zeros((B, L, 4), jnp.int32),
+        jnp.zeros((B, L, 4), jnp.int32),
+        jnp.ones((B, L // t, L // t), jnp.int32),
+    )
+    return args, t, (B, L, H, Dv)
+
+
 def _check_block_diff() -> list[Finding]:
     from ..kernels import block_diff_attn as bd
     findings: list[Finding] = []
     path = str(Path(bd.__file__))
     line = bd.block_diff_attention.__code__.co_firstlineno
-    B, L, H, Hkv, D = 1, 256, 2, 1, 128
-    args = (
-        jnp.zeros((B, L, H, D), jnp.float32),
-        jnp.zeros((B, L, Hkv, D), jnp.float32),
-        jnp.zeros((B, L, Hkv, D), jnp.float32),
-        jnp.zeros((B, L, 4), jnp.int32),
-        jnp.zeros((B, L, 4), jnp.int32),
-        jnp.ones((B, L // 128, L // 128), jnp.int32),
-    )
-    call = functools.partial(bd.block_diff_attention, interpret=True)
-    with capture_launches() as launches:
-        out = call(*args)
-    if tuple(out.shape) != (B, L, H, D):
-        findings.append(Finding(
-            "kernel-plan-matrix", path, line,
-            f"block_diff_attention: output shape {tuple(out.shape)} != "
-            f"{(B, L, H, D)}"))
-    for launch in launches:
-        # tiles are 128-lane by construction; hold scratch to the tile
-        findings.extend(check_launch(
-            launch, require_tile=True, path=path, line=line,
-            where="block_diff_attention"))
-    try:
-        jax.eval_shape(call, *args)
-    except Exception as e:  # pragma: no cover - defect path
-        findings.append(Finding(
-            "kernel-plan-matrix", path, line,
-            "block_diff_attention failed abstract evaluation: "
-            f"{type(e).__name__}: {e}"))
+    for shape_kind, interpret, require_tile in _BLOCK_DIFF_MATRIX:
+        args, t, out_shape = _block_diff_args(
+            aligned=shape_kind == "aligned")
+        q, k, v, qm, km, tm = args
+        where = f"block_diff_attention[{shape_kind}, " \
+            f"interpret={interpret}]"
+        call = functools.partial(bd.block_diff_attention, tq=t, tk=t,
+                                 interpret=interpret)
+
+        # differentiate through the kernel so ONE capture records the
+        # lse-emitting forward plus both backward launches
+        def grad_call(q, k, v):
+            return jax.grad(
+                lambda *a: jnp.sum(call(*a, qm, km, tm)
+                                   .astype(jnp.float32)),
+                argnums=(0, 1, 2))(q, k, v)
+
+        with capture_launches() as launches:
+            out = call(*args)          # inference forward (no lse)
+            grad_call(q, k, v)         # training fwd + dQ + dKV
+        if tuple(out.shape) != out_shape:
+            findings.append(Finding(
+                "kernel-plan-matrix", path, line,
+                f"{where}: output shape {tuple(out.shape)} != expected "
+                f"{out_shape}"))
+        seen = {launch.name for launch in launches}
+        for kern in _BLOCK_DIFF_KERNELS:
+            if kern not in seen:
+                findings.append(Finding(
+                    "kernel-plan-matrix", path, line,
+                    f"{where}: differentiating never launched {kern} "
+                    f"(captured: {sorted(seen)})"))
+        for launch in launches:
+            findings.extend(check_launch(
+                launch, require_tile=require_tile, path=path, line=line,
+                where=f"{where}:{launch.name}"))
+        # abstract-eval the unpatched forward AND backward bodies
+        try:
+            jax.eval_shape(call, *args)
+            jax.eval_shape(grad_call, q, k, v)
+        except Exception as e:  # pragma: no cover - defect path
+            findings.append(Finding(
+                "kernel-plan-matrix", path, line,
+                f"{where}: failed abstract evaluation: "
+                f"{type(e).__name__}: {e}"))
     return findings
 
 
@@ -384,6 +441,22 @@ _PREFILL_FEATURES = {
 _DECODE_USE = re.compile(r"block_table|paged_decode_attention")
 _PREFILL_USE = re.compile(r"context_table|paged_prefill_attention")
 
+# gradient-parity coverage of the differentiable training kernels
+# (tests/test_kernels.py): the custom-VJP backward must stay pinned
+# against autodiff across the mask-feature grid
+_TRAIN_DEFAULT_TESTS = Path(__file__).resolve().parents[3] / "tests" / \
+    "test_kernels.py"
+_TRAIN_FEATURES = {
+    "gradient parity (VJP vs autodiff)": r"jax\.grad|value_and_grad",
+    "grouped heads (GQA/MQA/MLA)": r"\bHkv\b",
+    "sliding window": r"window.{0,80}\d",
+    "softcap tanh chain rule": r"softcap.{0,80}\d",
+    "strict packed layout": r"packed|strict",
+    "zero grads at INVALID_COPY padding": r"invalid|INVALID_COPY",
+}
+_TRAIN_USE = re.compile(
+    r"[\"']pallas(_interpret)?[\"']|block_diff_attention")
+
 
 def _effective_sources(source: str) -> dict[str, str]:
     """Test name -> its source expanded with called top-level helpers."""
@@ -408,16 +481,13 @@ def _effective_sources(source: str) -> dict[str, str]:
     return out
 
 
-def check_parity_coverage(tests_path=None) -> list[Finding]:
-    path = Path(tests_path) if tests_path else _DEFAULT_TESTS
+def _coverage_of(path: Path, kernels) -> list[Finding]:
     if not path.exists():
         return [Finding("kernel-parity-coverage", str(path), 1,
                         "parity test file is missing")]
     sources = _effective_sources(path.read_text())
     findings: list[Finding] = []
-    for kernel, use_re, features in (
-            ("paged_decode_attention", _DECODE_USE, _DECODE_FEATURES),
-            ("paged_prefill_attention", _PREFILL_USE, _PREFILL_FEATURES)):
+    for kernel, use_re, features in kernels:
         relevant = [s for s in sources.values() if use_re.search(s)]
         if not relevant:
             findings.append(Finding(
@@ -430,6 +500,20 @@ def check_parity_coverage(tests_path=None) -> list[Finding]:
                     "kernel-parity-coverage", str(path), 1,
                     f"masking-contract feature `{feature}` of {kernel} "
                     "is not exercised by any parity test"))
+    return findings
+
+
+def check_parity_coverage(tests_path=None,
+                          train_tests_path=None) -> list[Finding]:
+    serve = Path(tests_path) if tests_path else _DEFAULT_TESTS
+    train = Path(train_tests_path) if train_tests_path \
+        else _TRAIN_DEFAULT_TESTS
+    findings = _coverage_of(serve, (
+        ("paged_decode_attention", _DECODE_USE, _DECODE_FEATURES),
+        ("paged_prefill_attention", _PREFILL_USE, _PREFILL_FEATURES)))
+    findings += _coverage_of(train, (
+        ("block_diff_attention (training VJP)", _TRAIN_USE,
+         _TRAIN_FEATURES),))
     return findings
 
 

@@ -13,24 +13,57 @@ Three implementations of the same contract:
                    score work from 4L^2 to ~2L^2 + L*Bsz and is fully
                    XLA-analysable — this is the path the multi-pod dry-run
                    lowers.
-* ``pallas`` / ``pallas_interpret`` — the TPU kernel
+* ``pallas`` / ``pallas_interpret`` — the TPU kernel family
                    (``block_diff_attn.py``), tile-skipping via
                    ``build_tile_map`` (~L^2-ish visited area, the
-                   FlexAttention-equivalent fast path).
+                   FlexAttention-equivalent fast path).  Fully
+                   differentiable: a ``custom_vjp`` pairs the forward
+                   with dQ/dKV flash backward kernels that reuse the
+                   same tile map, so SFT/DiPO training skips the same
+                   empty tiles three times per step.  ``impl="pallas"``
+                   auto-selects interpret mode off-TPU (CI runs the
+                   real kernel bodies on CPU); ``pallas_interpret``
+                   forces it.
 
 All take (q, k, v) in (B, L, H/Hkv, D) layout plus ``SeqMeta``.
+Tile sizes are clamped to divisors of the sequence lengths, so the
+pallas path works at any block-aligned length without caller padding.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.masks import SeqMeta, visibility
 from . import ref as _ref
-from .block_diff_attn import INVALID_COPY, block_diff_attention
+from .block_diff_attn import (INVALID_COPY, block_diff_attention,
+                              default_interpret)
 
 NEG_INF = _ref.NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainExecPlan:
+    """How a training attention impl will execute — startup print fodder
+    (the training analogue of ``paged_attn.KernelPlan``)."""
+
+    impl: str
+    mode: str      # "compiled" | "interpret" | "xla"
+    reason: str
+
+
+def train_exec_plan(impl: str) -> TrainExecPlan:
+    """Resolve ``impl`` to its execution mode on the current backend."""
+    if impl in ("pallas", "pallas_interpret"):
+        if impl == "pallas_interpret" or default_interpret():
+            return TrainExecPlan(impl, "interpret",
+                                 "pallas kernels on non-TPU backend "
+                                 "(interpret mode)")
+        return TrainExecPlan(impl, "compiled", "pallas kernels on TPU")
+    return TrainExecPlan(impl, "xla", f"pure-jnp {impl} path (XLA)")
 
 
 # ---------------------------------------------------------------------------
@@ -99,12 +132,28 @@ def build_tile_map(q_meta: jax.Array, k_meta: jax.Array, tq: int, tk: int,
 
 
 def tile_map_stats(tile_map: jax.Array) -> dict:
-    """Fraction of visited / full tiles — feeds the roofline notes."""
+    """Fraction of visited / partial / full tiles — feeds the roofline
+    notes and the trainer/scheduler ``obs`` gauges."""
     total = tile_map.size
     visited = int((tile_map > 0).sum())
     full = int((tile_map == 2).sum())
+    denom = max(total, 1)
     return {"tiles_total": total, "tiles_visited": visited,
-            "tiles_full": full, "visit_fraction": visited / max(total, 1)}
+            "tiles_full": full, "visit_fraction": visited / denom,
+            "partial_fraction": (visited - full) / denom,
+            "full_fraction": full / denom}
+
+
+def layout_tile_stats(meta: SeqMeta, *, tq: int = 128, tk: int = 128,
+                      window: int | None = None) -> dict:
+    """Host-side tile stats for a layout's self-attention (the sparsity
+    the pallas kernels exploit), with the same tile-size clamping as the
+    ``attention`` dispatcher."""
+    pm = pack_meta(meta)
+    L = pm.shape[1]
+    tq = _pick_chunk(L, tq)
+    tk = _pick_chunk(L, tk)
+    return tile_map_stats(build_tile_map(pm, pm, tq, tk, window=window))
 
 
 # ---------------------------------------------------------------------------
@@ -312,8 +361,11 @@ def attention(q, k, v, q_meta: SeqMeta, k_meta: SeqMeta, *,
 
     ``dup_len``/``block_size`` enable the structured fast path when the
     layout is the DiRL duplicated layout (copy A = first ``dup_len``
-    positions).  ``pallas`` requires Lq/Lk divisible by the tile sizes
-    (callers pad; all framework layouts are block-aligned).
+    positions).  ``pallas`` clamps ``tq``/``tk`` to divisors of Lq/Lk
+    (framework layouts are block-aligned, so this always succeeds) and
+    is differentiable — the custom-VJP backward kernels skip the same
+    empty tiles as the forward — so it is valid under ``jax.grad`` and
+    ``jax.checkpoint`` in the trainers.
     """
     if impl == "ref":
         vis = visibility(q_meta, k_meta, window=window, strict=strict)
@@ -328,11 +380,16 @@ def attention(q, k, v, q_meta: SeqMeta, k_meta: SeqMeta, *,
             q, k, v, q_meta, dup_len, block_size,
             scale=scale, softcap=softcap, window=window, strict=strict)
     if impl in ("pallas", "pallas_interpret"):
+        # clamp tiles to divisors so model-layer defaults (128) work at
+        # any block-aligned length; interpret off-TPU (CI runs the real
+        # kernel bodies on CPU, mirroring paged_attn.plan_exec)
+        tq = _pick_chunk(q.shape[1], tq)
+        tk = _pick_chunk(k.shape[1], tk)
         qm = pack_meta(q_meta)
         km = pack_meta(k_meta)
         tile_map = build_tile_map(qm, km, tq, tk, window=window)
         return block_diff_attention(
             q, k, v, qm, km, tile_map, scale=scale, softcap=softcap,
             window=window, strict=strict, tq=tq, tk=tk,
-            interpret=(impl == "pallas_interpret"))
+            interpret=(impl == "pallas_interpret") or default_interpret())
     raise ValueError(f"unknown attention impl: {impl}")

@@ -50,17 +50,19 @@ def make_serve_step(model: BlockDiffLM):
 
 
 def input_specs(arch: str, shape_name: str, *, dtype: str = "bfloat16",
-                opt_cfg: adamw.AdamWConfig | None = None) -> dict:
+                opt_cfg: adamw.AdamWConfig | None = None,
+                attn_impl: str = "structured") -> dict:
     """ShapeDtypeStruct stand-ins for every input of the lowered step.
 
     Returns {"cfg", "model", "kind", "args": tuple_of_SDS, "params",
     "opt_state"} — weak-type-correct, shardable, no device allocation.
     Modality frontends contribute precomputed embedding stand-ins (the
-    allowed stub).
+    allowed stub).  ``attn_impl`` selects the training attention backend
+    (all are differentiable, incl. the pallas custom-VJP kernels).
     """
     shp = configs.INPUT_SHAPES[shape_name]
     cfg = configs.get_config(arch, dtype=dtype, param_dtype=dtype,
-                             remat=True, attn_impl="structured",
+                             remat=True, attn_impl=attn_impl,
                              moe_groups=32)
     model = BlockDiffLM(cfg)
     params = jax.eval_shape(

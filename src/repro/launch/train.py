@@ -36,6 +36,11 @@ def main():
                     default="host")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config")
+    ap.add_argument("--attn-impl", default="structured",
+                    choices=["ref", "structured", "chunked", "pallas"],
+                    help="training attention backend; pallas runs the "
+                         "differentiable tile-sparse kernels (interpret "
+                         "mode off-TPU)")
     ap.add_argument("--dry-run", action="store_true",
                     help="lower+compile only (see repro.launch.dryrun for "
                          "the full sweep)")
@@ -78,6 +83,10 @@ def main():
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
+    cfg = cfg.replace(attn_impl=args.attn_impl)
+    from repro.kernels.ops import train_exec_plan
+    plan = train_exec_plan(cfg.attn_impl)
+    print(f"[train] attn {plan.impl} | exec {plan.mode}: {plan.reason}")
     if args.mesh == "host":
         mesh = make_host_mesh()
     else:
@@ -102,7 +111,8 @@ def main():
 
         if args.dry_run:
             from repro.launch.steps import input_specs
-            si = input_specs(args.arch, "train_4k")
+            si = input_specs(args.arch, "train_4k",
+                             attn_impl=args.attn_impl)
             lowered = jstep.lower(si["params"], si["opt_state"],
                                   si["batch"], si["rng"])
             compiled = lowered.compile()

@@ -95,7 +95,10 @@ class ModelConfig:
     # compute policy
     dtype: str = "float32"
     param_dtype: str = "float32"
-    attn_impl: str = "structured"  # ref | structured | pallas | pallas_interpret
+    # ref | structured | chunked | pallas | pallas_interpret; all are
+    # differentiable (pallas via the custom-VJP flash backward kernels),
+    # so any of them is a valid training impl
+    attn_impl: str = "structured"
     remat: bool = False
     remat_policy: str = "nothing"  # nothing | dots
     scan_layers: bool = True

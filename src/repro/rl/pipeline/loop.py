@@ -55,7 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import decoding
+from repro.core.masks import packed_layout
 from repro.core.trajectory import trajectory_logprobs
+from repro.kernels.ops import layout_tile_stats
 from repro.obs import profile
 from repro.obs.metrics import MetricsRegistry
 from repro.optim import adamw
@@ -96,6 +98,19 @@ class AsyncDiPOTrainer:
             "step_traces", "compilations of the fused DiPO step")
         self._batches_ahead = self.metrics.gauge(
             "batches_ahead", "submitted-but-unconsumed prompt batches")
+        # tile-map sparsity of the consumed batch's packed-layout
+        # forward (incl. the sealing forward) — set *before* the step
+        # dispatch so the gauge never syncs the overlapped device work
+        self._tile_gauges = {
+            f: self.metrics.gauge(
+                f"attn_tile_{f}",
+                f"attention tile-map {f.replace('_', ' ')} this update")
+            for f in ("visit_fraction", "partial_fraction",
+                      "full_fraction")}
+        self._stats_layout = (
+            rl_cfg.logprob_scheme == "packed"
+            or (rl_cfg.logprob_scheme == "auto"
+                and not model.cfg.ssm_kind))
         s_max = engine.gen_cfg.s_max
         # the sync trainer's fused step, verbatim — same jaxpr, same
         # donation contract; old_logp switches Eq. 7 <-> Eq. 6
@@ -167,6 +182,15 @@ class AsyncDiPOTrainer:
                 gid = np.repeat(np.arange(P, dtype=np.int32), G)
                 roll = decoding.rollout_to_batch(
                     gen, jnp.asarray(rewards), jnp.asarray(gid), bsz)
+                if self._stats_layout:
+                    _, meta, _, _ = packed_layout(
+                        roll.tokens, roll.steps, roll.valid,
+                        block_size=bsz,
+                        mask_token=self.model.cfg.resolved_mask_token,
+                        s_max=self.engine.gen_cfg.s_max)
+                    stats = layout_tile_stats(meta)
+                    for f, g in self._tile_gauges.items():
+                        g.set(stats[f])
                 old_logp = fresh = None
                 if self.staleness_k > 0:
                     # one executable for any fresh/sealed mix: sealed

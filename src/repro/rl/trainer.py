@@ -19,7 +19,9 @@ import numpy as np
 from repro.analysis.guards import TraceGuard
 from repro.core import decoding
 from repro.core.dipo import dipo_loss
+from repro.core.masks import packed_layout
 from repro.core.trajectory import trajectory_logprobs
+from repro.kernels.ops import layout_tile_stats
 from repro.obs import profile
 from repro.obs.metrics import MetricsRegistry
 from repro.rl.rewards import math_rewards
@@ -123,6 +125,20 @@ class DiPOTrainer:
             "steps", "train steps executed")
         self._step_traces = self.metrics.gauge(
             "step_traces", "compilations of the fused DiPO step")
+        # tile-map sparsity of the packed-layout logprob forward — what
+        # the pallas training kernels visit/skip on this step's batch
+        self._tile_gauges = {
+            f: self.metrics.gauge(
+                f"attn_tile_{f}",
+                f"attention tile-map {f.replace('_', ' ')} this step")
+            for f in ("visit_fraction", "partial_fraction",
+                      "full_fraction")}
+        # packed is the layout the attention backbones actually run;
+        # replay/fused_approx never build the packed mask
+        self._stats_layout = (
+            rl_cfg.logprob_scheme == "packed"
+            or (rl_cfg.logprob_scheme == "auto"
+                and not model.cfg.ssm_kind))
         s_max = engine.gen_cfg.s_max
         # the same fused step the async pipeline consumer runs (always
         # called with old_logp=None here: fresh rollouts every step are
@@ -198,6 +214,16 @@ class DiPOTrainer:
                 timing[f"{phase}_s"])
         self._steps_total.inc()
         self._step_traces.set(self._step.n_traces)
+        if self._stats_layout:
+            # host-side rebuild of the packed mask metadata (cheap: meta
+            # only, no forward) -> per-step sparsity gauges
+            _, meta, _, _ = packed_layout(
+                roll.tokens, roll.steps, roll.valid, block_size=bsz,
+                mask_token=self.model.cfg.resolved_mask_token,
+                s_max=self.engine.gen_cfg.s_max)
+            stats = layout_tile_stats(meta)
+            for f, g in self._tile_gauges.items():
+                g.set(stats[f])
         if self.engine.last_call.get("batching") == "continuous":
             timing["rollout_util"] = self.engine.last_call["utilization"]
             timing["prefix_hit_rate"] = \

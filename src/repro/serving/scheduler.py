@@ -156,6 +156,8 @@ import numpy as np
 
 from repro.analysis.guards import TraceGuard
 from repro.core import decoding
+from repro.core.masks import plain_layout
+from repro.kernels.ops import layout_tile_stats
 from repro.models import attention
 from repro.obs import profile
 from repro.obs.metrics import MetricsRegistry
@@ -250,6 +252,10 @@ class SchedulerStats:
     prefix_miss_blocks: int = 0  # prompt blocks that paid a prefill
     shared_pages: int = 0        # peak pages referenced by >= 2 slots
     prefix_evictions: int = 0    # refcount-0 index entries LRU-reclaimed
+    # tile-map visit fraction of the most recent admission's prefill
+    # attention (block-causal mask at block granularity) — the sparsity
+    # the tile-sparse kernel family skips on the serve side
+    prefill_tile_visit_fraction: float = 0.0
 
     # monotonic fields -> Counter; level/peak fields -> Gauge
     _COUNTER_FIELDS = ("ticks", "slot_ticks", "active_slot_ticks",
@@ -260,7 +266,7 @@ class SchedulerStats:
     _GAUGE_FIELDS = ("peak_active", "transient_kv_bytes",
                      "admit_transient_kv_bytes", "advance_traces",
                      "peak_pages_in_use", "peak_pages_live",
-                     "shared_pages")
+                     "shared_pages", "prefill_tile_visit_fraction")
 
     def __post_init__(self):
         # non-field attribute: stays out of dataclasses.fields() and
@@ -649,6 +655,16 @@ class SlotScheduler:
                                   caches,
                                   st.table.at[slot].set(table_row), samp)
 
+    def _note_prefill_tiles(self, req: Request) -> None:
+        """Host-side gauge: tile-map sparsity of this admission's prefill
+        attention (block granularity, i.e. the block-causal mask)."""
+        bsz = self.model.cfg.block_size
+        meta = plain_layout(jnp.asarray(req.prompt, jnp.int32)[None],
+                            jnp.ones((1, len(req.prompt)), bool),
+                            block_size=bsz)
+        stats = layout_tile_stats(meta, tq=bsz, tk=bsz)
+        self.stats.prefill_tile_visit_fraction = stats["visit_fraction"]
+
     def _admit_paged(self, params, slot: int, req: Request,
                      budget: int) -> bool:
         """Admit one request into ``slot`` under the paged allocator.
@@ -675,6 +691,7 @@ class SlotScheduler:
             self._slot_blk[slot] = pb
             self.stats.page_allocs += pb
             self.stats.prefill_blocks += pb
+            self._note_prefill_tiles(req)
             self._admit_info = {"path": "cold", "hit_blocks": 0,
                                 "new_pages": pb}
             with profile.annotate("prefill"):
@@ -716,6 +733,8 @@ class SlotScheduler:
         self.stats.prefix_hit_blocks += h
         self.stats.prefix_miss_blocks += pb - h
         self.stats.prefill_blocks += pb - h
+        if pb > h:
+            self._note_prefill_tiles(req)
         self.stats.shared_pages = max(self.stats.shared_pages,
                                       self.prefix.n_shared)
         self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
@@ -1026,6 +1045,7 @@ class SlotScheduler:
                         break
                 else:
                     self.stats.prefill_blocks += req.prompt_blocks
+                    self._note_prefill_tiles(req)
                     self._admit_info = {"path": "dense", "hit_blocks": 0}
                     with profile.annotate("prefill"):
                         self._state = self._admit_jit(

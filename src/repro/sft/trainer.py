@@ -10,6 +10,8 @@ import jax.numpy as jnp
 
 from repro.analysis.guards import TraceGuard
 from repro.core.block_diffusion import sft_loss
+from repro.core.masks import dirl_layout, sample_sft_noise
+from repro.kernels.ops import layout_tile_stats
 from repro.obs import profile
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
@@ -52,6 +54,15 @@ class SFTTrainer:
             "steps", "train steps executed")
         self._step_traces = self.metrics.gauge(
             "step_traces", "compilations of the fused SFT step")
+        # tile-map sparsity of this step's attention mask — the exact
+        # fraction the pallas kernels visit/skip (layer-window effects
+        # excluded, so these are per-step upper bounds)
+        self._tile_gauges = {
+            f: self.metrics.gauge(
+                f"attn_tile_{f}",
+                f"attention tile-map {f.replace('_', ' ')} this step")
+            for f in ("visit_fraction", "partial_fraction",
+                      "full_fraction")}
 
         def step_fn(params, opt_state, batch, rng):
             def loss_fn(p):
@@ -83,6 +94,27 @@ class SFTTrainer:
         self._step_traces.set(self._step.n_traces)
         out = {k: float(v) for k, v in metrics.items()}
         out["step_traces"] = self._step.n_traces
+        out.update(self._tile_stats(batch, rng))
+        return out
+
+    def _tile_stats(self, batch: dict, rng) -> dict:
+        """Host-side replay of this step's layout (same rng, so the same
+        sampled noise) -> tile-map sparsity gauges."""
+        if self.layout != "dirl":
+            return {}
+        cfg = self.model.cfg
+        steps, _, _ = sample_sft_noise(
+            rng, batch["tokens"], batch["prompt_mask"], batch["valid"],
+            block_size=cfg.block_size)
+        _, meta, _ = dirl_layout(
+            batch["tokens"], steps, batch["valid"],
+            block_size=cfg.block_size, mask_token=cfg.resolved_mask_token,
+            noised=True)
+        stats = layout_tile_stats(meta)
+        out = {}
+        for f, g in self._tile_gauges.items():
+            g.set(stats[f])
+            out[f"attn_tile_{f}"] = stats[f]
         return out
 
     def run(self, batches: Iterator, steps: int, rng, *,

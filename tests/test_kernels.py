@@ -94,3 +94,232 @@ def test_tile_skip_fraction():
     tm = ops.build_tile_map(qm, qm, 16, 16)
     stats = ops.tile_map_stats(tm)
     assert stats["visit_fraction"] < 0.45, stats
+    assert stats["partial_fraction"] + stats["full_fraction"] == \
+        pytest.approx(stats["visit_fraction"])
+
+
+# --------------------------- gradients (custom VJP) ------------------------
+
+
+GRAD_TOL = 5e-4  # f32, vs autodiff through the ref/structured oracles
+
+
+def _grads(impl, q, k, v, meta, strict, **kw):
+    """value+grads of a nontrivial scalar through ``ops.attention``."""
+    def f(q, k, v):
+        o = ops.attention(q, k, v, meta, meta, impl=impl, strict=strict,
+                          **kw)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+    loss, grads = jax.jit(
+        jax.value_and_grad(f, argnums=(0, 1, 2)))(q, k, v)
+    return loss, grads
+
+
+def _assert_grads_close(a, b, tol=GRAD_TOL):
+    la, ga = a
+    lb, gb = b
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=tol,
+                               rtol=tol)
+    for x, y in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("kind", ["sft", "packed"])
+def test_grad_parity_vs_ref(shape, kind):
+    """pallas VJP == autodiff through the dense oracle (MHA/GQA/MQA+MLA
+    head groupings x sft/strict-packed layouts)."""
+    B, L, H, Hkv, D, Dv, bsz = shape
+    q, k, v, meta, strict = _setup(B, L, H, Hkv, D, Dv, bsz, jnp.float32,
+                                   kind=kind)
+    ref = _grads("ref", q, k, v, meta, strict)
+    pal = _grads("pallas_interpret", q, k, v, meta, strict, tq=16, tk=16)
+    _assert_grads_close(ref, pal)
+
+
+@pytest.mark.parametrize("window", [None, 8, 24])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_grad_parity_window_softcap(window, softcap):
+    """The backward's score chain rule handles softcap's tanh and the
+    window term (which enters only through the mask)."""
+    q, k, v, meta, strict = _setup(2, 64, 4, 2, 16, 16, 8, jnp.float32)
+    kw = dict(window=window, softcap=softcap, tq=16, tk=16)
+    ref = _grads("ref", q, k, v, meta, strict, window=window,
+                 softcap=softcap)
+    pal = _grads("pallas_interpret", q, k, v, meta, strict, **kw)
+    _assert_grads_close(ref, pal)
+
+
+def test_grad_parity_vs_structured():
+    """pallas VJP == autodiff through the structured dup-layout fast
+    path (the impl the trainers used before the kernel became
+    differentiable)."""
+    q, k, v, meta, strict = _setup(2, 64, 4, 2, 16, 16, 8, jnp.float32)
+    st = _grads("structured", q, k, v, meta, strict, dup_len=64,
+                block_size=8)
+    pal = _grads("pallas_interpret", q, k, v, meta, strict, tq=16, tk=16)
+    _assert_grads_close(st, pal)
+
+
+def test_grad_zero_at_invalid_padding():
+    """INVALID_COPY (padding) positions — empty tile rows included — get
+    *exactly* zero gradients on both the query and key/value sides."""
+    from repro.core.masks import dirl_layout, sample_sft_noise
+
+    B, L, H, Hkv, D, Dv, bsz = 2, 64, 4, 2, 16, 16, 8
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (B, L), 4, 100)
+    # a 16-token invalid tail: its tiles are provably empty and the
+    # kernel never touches them in forward or backward
+    valid = jnp.broadcast_to(jnp.arange(L)[None, :] < (L - 16), (B, L))
+    pm = jnp.arange(L)[None, :] < bsz
+    steps, _, _ = sample_sft_noise(key, tokens, pm, valid, block_size=bsz)
+    _, meta, _ = dirl_layout(tokens, steps, valid, block_size=bsz,
+                             mask_token=101, noised=True)
+    T = meta.length
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, Dv))
+    _, (dq, dk, dv) = _grads("pallas_interpret", q, k, v, meta, False,
+                             tq=16, tk=16)
+    invalid = ~jnp.asarray(meta.valid)
+    assert float(jnp.max(jnp.abs(dq[invalid]))) == 0.0
+    assert float(jnp.max(jnp.abs(dk[invalid]))) == 0.0
+    assert float(jnp.max(jnp.abs(dv[invalid]))) == 0.0
+    # and the valid region still trains
+    assert float(jnp.max(jnp.abs(dq))) > 0.0
+
+
+# --------------------------- trainer integration ---------------------------
+
+
+def _tiny_cfg(attn_impl, **kw):
+    from repro.models.config import ModelConfig
+    return ModelConfig(d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                       d_ff=64, vocab_size=64, block_size=8,
+                       attn_impl=attn_impl, **kw)
+
+
+def _sft_batch(B=2, L=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "tokens": jax.random.randint(key, (B, L), 4, 60),
+        "prompt_mask": jnp.broadcast_to(jnp.arange(L)[None, :] < 8,
+                                        (B, L)),
+        "valid": jnp.ones((B, L), bool),
+    }
+
+
+@pytest.mark.parametrize("remat", [False, True])
+def test_sft_loss_grad_parity_structured_vs_pallas(remat):
+    """One SFT step computes the same loss and gradients whichever impl
+    the config selects — pallas trains on the kernel fast path."""
+    from repro.core.block_diffusion import sft_loss
+    from repro.models.model import BlockDiffLM
+
+    batch, rng = _sft_batch(), jax.random.PRNGKey(7)
+    out = {}
+    for impl in ("structured", "pallas"):
+        model = BlockDiffLM(_tiny_cfg(impl, remat=remat))
+        params = model.init(jax.random.PRNGKey(1))
+        (loss, _), grads = jax.jit(jax.value_and_grad(
+            lambda p: sft_loss(model, p, batch, rng), has_aux=True))(
+                params)
+        out[impl] = (loss, grads)
+    ls, gs = out["structured"]
+    lp, gp = out["pallas"]
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(lp), atol=1e-4,
+                               rtol=1e-4)
+    flat_s = jax.tree.leaves(gs)
+    flat_p = jax.tree.leaves(gp)
+    for a, b in zip(flat_s, flat_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_dipo_logprob_grad_parity_structured_vs_pallas():
+    """The DiPO packed-layout logprob forward+backward agrees between
+    the structured and pallas impls (the RL training fast path)."""
+    from repro.core.trajectory import RolloutBatch, trajectory_logprobs
+    from repro.models.model import BlockDiffLM
+
+    B, L, bsz, s_max = 4, 24, 8, 3
+    key = jax.random.PRNGKey(3)
+    roll = RolloutBatch(
+        tokens=jax.random.randint(key, (B, L), 4, 60),
+        steps=jax.random.randint(jax.random.fold_in(key, 1), (B, L),
+                                 0, s_max),
+        prompt_mask=jnp.broadcast_to(jnp.arange(L)[None, :] < bsz,
+                                     (B, L)),
+        valid=jnp.ones((B, L), bool),
+        rewards=jnp.ones((B,), jnp.float32),
+        group=jnp.zeros((B,), jnp.int32),
+    )
+    out = {}
+    for impl in ("structured", "pallas"):
+        model = BlockDiffLM(_tiny_cfg(impl))
+        params = model.init(jax.random.PRNGKey(1))
+        loss, grads = jax.jit(jax.value_and_grad(
+            lambda p: jnp.sum(trajectory_logprobs(
+                model, p, roll, s_max=s_max, scheme="packed")
+                * roll.loss_mask)))(params)
+        out[impl] = (loss, grads)
+    ls, gs = out["structured"]
+    lp, gp = out["pallas"]
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(lp), atol=2e-3,
+                               rtol=2e-3)
+    for a, b in zip(jax.tree.leaves(gs), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_sft_trainer_single_trace_pallas_remat():
+    """step_traces == 1 across steps with attn_impl="pallas" under
+    remat — the custom VJP neither retraces nor breaks checkpointing."""
+    from repro.models.model import BlockDiffLM
+    from repro.optim import adamw
+    from repro.sft.trainer import SFTTrainer
+
+    model = BlockDiffLM(_tiny_cfg("pallas", remat=True))
+    params = model.init(jax.random.PRNGKey(1))
+    tr = SFTTrainer(model, adamw.AdamWConfig(lr=1e-3), params)
+    rng = jax.random.PRNGKey(2)
+    for i in range(2):
+        rng, k = jax.random.split(rng)
+        m = tr.train_step(_sft_batch(seed=i), k)
+        assert m["step_traces"] == 1
+    assert 0.0 < m["attn_tile_visit_fraction"] <= 1.0
+
+
+def test_dipo_step_single_trace_pallas():
+    """The fused DiPO step stays at one compile with the pallas impl."""
+    from repro.core.trajectory import RolloutBatch
+    from repro.models.model import BlockDiffLM
+    from repro.optim import adamw
+    from repro.rl.trainer import DiPOConfig, make_dipo_step
+
+    B, L, bsz, s_max = 4, 24, 8, 3
+    model = BlockDiffLM(_tiny_cfg("pallas"))
+    params = model.init(jax.random.PRNGKey(1))
+    opt_cfg = adamw.AdamWConfig(lr=1e-4)
+    opt_state = adamw.init_state(opt_cfg, params)
+    step = make_dipo_step(model, opt_cfg,
+                          DiPOConfig(group_size=2,
+                                     logprob_scheme="packed"), s_max)
+    for seed in range(2):
+        key = jax.random.PRNGKey(seed)
+        roll = RolloutBatch(
+            tokens=jax.random.randint(key, (B, L), 4, 60),
+            steps=jax.random.randint(jax.random.fold_in(key, 1), (B, L),
+                                     0, s_max),
+            prompt_mask=jnp.broadcast_to(jnp.arange(L)[None, :] < bsz,
+                                         (B, L)),
+            valid=jnp.ones((B, L), bool),
+            rewards=jnp.asarray([1.0, 0.0, 1.0, 0.0], jnp.float32),
+            group=jnp.asarray([0, 0, 1, 1], jnp.int32),
+        )
+        params, opt_state, _ = step(params, opt_state, roll, None, None,
+                                    None, 2)
+    assert step.n_traces == 1
